@@ -1,0 +1,90 @@
+"""Collective-traffic attribution tool for the perf loop (§Perf).
+
+    PYTHONPATH=src python -m benchmarks.attr_collectives \
+        --arch qwen3-moe-235b-a22b --cell train_4k [--top 12] [--meta]
+
+Lowers the cell on the single-pod mesh, walks the HLO with trip-count
+multipliers, and prints the top collective ops by link bytes.
+"""
+import argparse
+import os
+import re
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default="train_4k")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--meta", action="store_true")
+    ap.add_argument("--overrides", default=None)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax                                             # noqa: E402
+    from repro.launch.dryrun import build_lowered          # noqa: E402
+    from repro.launch.mesh import make_production_mesh     # noqa: E402
+    from repro.configs import get_config                   # noqa: E402
+    from repro.roofline import hlo_cost as H               # noqa: E402
+    import dataclasses
+
+    cfg = get_config(args.arch)
+    if args.overrides:
+        ov = {}
+        for kv in args.overrides.split(","):
+            k, v = kv.split("=")
+            if v in ("True", "true"):
+                v = True
+            elif v in ("False", "false"):
+                v = False
+            else:
+                try:
+                    v = int(v)
+                except ValueError:
+                    pass
+            ov[k] = v
+        cfg = dataclasses.replace(
+            cfg, train=dataclasses.replace(cfg.train, **ov))
+    compiled = build_lowered(cfg, args.cell,
+                             make_production_mesh()).compile()
+    comps = H.parse_module(compiled.as_text())
+    entry = next(n for n in comps if n.startswith("main"))
+
+    rows = []
+
+    def walk(comp, mult):
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc.endswith("-done"):
+                continue
+            if base in H._COLLECTIVES:
+                b = H._shape_bytes(op.out_shapes)
+                if oc.endswith("-start") and len(op.out_shapes) > 1:
+                    b /= 2
+                b *= H._wire_factor(op, comp, comps)
+                g = H._group_size(op.line)
+                rows.append((b * H._ring_factor(base, g) * mult, b, mult,
+                             g, base, op.line))
+            elif oc == "while":
+                mb = H._BODY_RE.search(op.line)
+                t = H._trip_count(op, comps)
+                if mb and mb.group(1) in comps:
+                    walk(comps[mb.group(1)], mult * t)
+
+    walk(comps[entry], 1.0)
+    rows.sort(reverse=True)
+    tot = sum(r[0] for r in rows)
+    print(f"total link bytes {tot:.4g} -> {tot / 50e9:.2f}s on ICI")
+    for link, b, mult, g, kind, line in rows[:args.top]:
+        print(f"{link:.3g} ({b:.3g} x{mult:.0f} g={g}) {kind}")
+        if args.meta:
+            m = re.search(r'op_name="([^"]+)', line)
+            print("   meta:", (m.group(1) if m else "?")[:160])
+        shapes = re.findall(r"\w+\[[\d,]*\]", line)[:8]
+        print("   shapes:", shapes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figs. 13/14/15 — Multi-core data-parallel data engineering.
+
+The paper scales the UNOMT preprocessing workload over cores (Fig. 13),
+reports relative speed-up (Fig. 14) and multi-node scaling (Fig. 15).
+Here: the distributed UNOMT pipeline at parallelism 1/2/4/8 in
+subprocesses (forced host devices).
+"""
+from __future__ import annotations
+
+from .common import Reporter, run_subprocess_bench
+
+N_RESPONSE = 100_000
+
+
+def run(fast: bool = False):
+    rep = Reporter("fig13_15_dataparallel_de")
+    n = N_RESPONSE // 10 if fast else N_RESPONSE
+    t1 = None
+    for world in (1, 2, 4, 8):
+        res = run_subprocess_bench("_subproc_unomt.py", world, world, n)
+        rep.add(f"hptmt_p{world}", "seconds", res["de_seconds"], rows=n,
+                dropped=res["dropped"])
+        if world == 1:
+            t1 = res["de_seconds"]
+        else:
+            rep.add(f"hptmt_p{world}", "speedup_vs_p1",
+                    t1 / res["de_seconds"])
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 16 — Distributed data-parallel deep learning (CPU).
+
+The paper trains the UNOMT drug-response network with PyTorch-DDP over
+MPI on CPUs.  Here: the same network through our BSP shard_map DDP step
+(runtime.ddp) at parallelism 1/2/4/8, data-engineering stage included
+(single source, single runtime — the paper's headline claim).
+"""
+from __future__ import annotations
+
+from .common import Reporter, run_subprocess_bench
+
+N_RESPONSE = 8_000
+
+
+def run(fast: bool = False):
+    rep = Reporter("fig16_ddp_train_cpu")
+    n = N_RESPONSE // 10 if fast else N_RESPONSE
+    t1 = None
+    for world in (1, 2, 4, 8):
+        res = run_subprocess_bench("_subproc_unomt.py", world, world, n,
+                                   "train", timeout=1200)
+        rep.add(f"hptmt_p{world}", "train_s_per_step",
+                res["train_seconds_per_step"], rows=n,
+                final_loss=res["final_loss"])
+        if world == 1:
+            t1 = res["train_seconds_per_step"]
+        else:
+            rep.add(f"hptmt_p{world}", "speedup_vs_p1",
+                    t1 / res["train_seconds_per_step"])
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 4 — Distributed Join performance and scaling.
+
+The paper joins two 200M-row relations with 10% key uniqueness at up to
+128 processes and compares Cylon vs Dask/Modin.  Here: our HPTMT
+distributed join at parallelism 1/2/4/8 (forced host devices, one
+subprocess each so device counts don't leak), plus a numpy sort-merge
+baseline as the single-core reference ("pandas" stand-in; pandas is not
+installed in this container).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Reporter, run_subprocess_bench, timeit
+
+ROWS = 200_000        # paper: 200M; scaled /1000 for CPU-only container
+
+
+def numpy_join_baseline(rows: int) -> float:
+    rng = np.random.default_rng(0)
+    nkeys = rows // 10
+    lk = rng.integers(0, nkeys, rows).astype(np.int32)
+    lv = rng.normal(size=rows).astype(np.float32)
+    rk = rng.integers(0, nkeys, rows).astype(np.int32)
+    rv = rng.normal(size=rows).astype(np.float32)
+
+    def join():
+        ls = np.argsort(lk, kind="stable")
+        rs = np.argsort(rk, kind="stable")
+        lks, rks = lk[ls], rk[rs]
+        lo = np.searchsorted(rks, lks, "left")
+        hi = np.searchsorted(rks, lks, "right")
+        cnt = hi - lo
+        out_l = np.repeat(ls, cnt)
+        offs = np.repeat(np.cumsum(cnt) - cnt, cnt)
+        within = np.arange(cnt.sum()) - offs
+        out_r = rs[np.repeat(lo, cnt) + within]
+        return lv[out_l] + rv[out_r]
+
+    return timeit(join, warmup=1, iters=3)
+
+
+def run(fast: bool = False):
+    rep = Reporter("fig4_distributed_join")
+    rows = ROWS // 4 if fast else ROWS
+    base_s = numpy_join_baseline(rows)
+    rep.add("numpy_1core", "seconds", base_s, rows=rows)
+    t1 = None
+    for world in (1, 2, 4, 8):
+        res = run_subprocess_bench("_subproc_join.py", world, world, rows)
+        rep.add(f"hptmt_p{world}", "seconds", res["seconds"], rows=rows,
+                out_rows=res["out_rows"], dropped=res["dropped"])
+        if world == 1:
+            t1 = res["seconds"]
+        else:
+            rep.add(f"hptmt_p{world}", "speedup_vs_p1",
+                    t1 / res["seconds"])
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: ref-path wall time on CPU + analytic TPU
+roofline for the Pallas kernels (the container has no TPU; the kernels'
+claimed VMEM tiling and per-byte/per-flop costs are reported against the
+v5e constants used in §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_partition import partition_plan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+from .common import Reporter, timeit
+
+
+def run(fast: bool = False):
+    rep = Reporter("kernel_micro")
+
+    # -- hash partition: the shuffle/MoE dispatch hot spot -----------------
+    n, parts = (1 << 16, 64) if fast else (1 << 20, 256)
+    pid = jnp.asarray(np.random.default_rng(0)
+                      .integers(0, parts, n).astype(np.int32))
+    f = jax.jit(lambda p: partition_plan(p, parts, impl="ref"),
+                static_argnames=())
+    t = timeit(lambda: jax.block_until_ready(f(pid)))
+    rep.add(f"hash_partition_n{n}_p{parts}", "cpu_ref_seconds", t)
+    # analytic TPU: one-hot (tile,P) int32 ops; traffic = read pid + write
+    # hist/ranks ~ 12 B/row
+    rep.add(f"hash_partition_n{n}_p{parts}", "tpu_roofline_us",
+            (12.0 * n) / HBM_BW * 1e6)
+
+    # -- flash attention ---------------------------------------------------
+    B, H, S, D = (1, 4, 1024, 64) if fast else (2, 8, 2048, 128)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    t = timeit(lambda: jax.block_until_ready(fa(q, k, v)))
+    rep.add(f"flash_attn_b{B}h{H}s{S}d{D}", "cpu_ref_seconds", t)
+    flops = 4.0 * B * H * S * S * D * 0.5          # causal half
+    rep.add(f"flash_attn_b{B}h{H}s{S}d{D}", "tpu_roofline_us",
+            flops / PEAK_FLOPS * 1e6)
+
+    # -- mamba selective scan ----------------------------------------------
+    B2, S2, E, N = (1, 512, 512, 16) if fast else (2, 2048, 1024, 16)
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    x = jax.random.normal(ks[0], (B2, S2, E), jnp.float32)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, E)))
+    A = -jnp.exp(jax.random.normal(ks[2], (E, N)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B2, S2, N))
+    Cm = jax.random.normal(ks[4], (B2, S2, N))
+    Dp = jax.random.normal(ks[5], (E,))
+    ss = jax.jit(lambda *a: selective_scan_ref(*a)[0])
+    t = timeit(lambda: jax.block_until_ready(ss(x, delta, A, Bm, Cm, Dp)))
+    rep.add(f"mamba_scan_b{B2}s{S2}e{E}", "cpu_ref_seconds", t)
+    # memory-bound: read x/delta/B/C + write y
+    traffic = (3 * B2 * S2 * E + 2 * B2 * S2 * N) * 4.0
+    rep.add(f"mamba_scan_b{B2}s{S2}e{E}", "tpu_roofline_us",
+            traffic / HBM_BW * 1e6)
+
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Roofline summary table (assignment §Roofline deliverable g).
+
+Reads results/dryrun.json (written by launch/dryrun.py against the
+16x16 / 2x16x16 production meshes) and prints the per-(arch×cell) terms.
+No new compilation happens here — the dry-run is the profile source.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import REPO, Reporter
+
+
+def _load(path, tag):
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        res = json.load(f)
+    return {k[len(tag) + 1:]: v for k, v in res.items()
+            if k.startswith(tag + "/") and v.get("ok")}
+
+
+def run(fast: bool = False):
+    rep = Reporter("roofline_table")
+    base = _load(os.path.join(REPO, "results", "dryrun.json"), "baseline")
+    opt = _load(os.path.join(REPO, "results", "dryrun_optimized.json"),
+                "optimized")
+    if not base:
+        print("results/dryrun.json missing — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return rep
+    print(f"{'cell':<52} {'bound':<11} {'compute_s':>10} {'memory_s':>10} "
+          f"{'coll_s':>10} {'step_s':>10} {'MFU%':>7} {'opt_step':>9} "
+          f"{'gain':>6}")
+    for name, rec in sorted(base.items()):
+        o = opt.get(name)
+        ostep = f"{o['step_s']:>9.3f}" if o else "        -"
+        gain = f"{rec['step_s'] / o['step_s']:>5.2f}x" if o \
+            and o["step_s"] else "     -"
+        print(f"{name:<52} {rec['bound']:<11} {rec['compute_s']:>10.4f} "
+              f"{rec['memory_s']:>10.4f} {rec['collective_s']:>10.4f} "
+              f"{rec['step_s']:>10.4f} {100 * rec['mfu']:>6.1f}% "
+              f"{ostep} {gain}")
+        rep.add(name, "step_s", rec["step_s"], bound=rec["bound"],
+                mfu=rec["mfu"],
+                **({"opt_step_s": o["step_s"], "opt_mfu": o["mfu"]}
+                   if o else {}))
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

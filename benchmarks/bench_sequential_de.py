@@ -1,0 +1,93 @@
+"""Paper Fig. 12 — Sequential (single-core) data engineering.
+
+The paper times the UNOMT drug-response preprocessing workload on Pandas,
+PyCylon and Modin single-core.  Here: the full UNOMT operator pipeline
+through our jitted table engine vs a straight numpy implementation of the
+same pipeline (the "pandas" stand-in available in this container).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.table import Table
+from repro.data.unomt import (drug_feature_cols, gen_unomt_tables, rna_cols,
+                              unomt_local_pipeline)
+
+from .common import Reporter, timeit
+
+N_RESPONSE = 100_000     # paper uses 2.5M samples; scaled for container
+
+
+def numpy_pipeline(raw) -> np.ndarray:
+    resp, desc, fp, rna = (raw["response"], raw["descriptors"],
+                           raw["fingerprints"], raw["rna"])
+    t = {k: resp[k] for k in ("drug_id_raw", "cell_id", "concentration",
+                              "response")}
+    t["drug_id"] = t.pop("drug_id_raw") - 1_000_000
+    keep = ~np.isnan(t["response"])
+    t = {k: v[keep] for k, v in t.items()}
+    c = t["concentration"]
+    t["concentration"] = (c - c.mean()) / (c.std() + 1e-12)
+    # drug = desc join fp on drug_id (both indexed 0..n-1 -> direct merge)
+    order = np.argsort(desc["drug_id"], kind="stable")
+    drug = {k: v[order] for k, v in desc.items()}
+    fpo = np.argsort(fp["drug_id"], kind="stable")
+    for k, v in fp.items():
+        if k != "drug_id":
+            drug[k] = v[fpo]
+    # rna dedup (first occurrence) + scale
+    _, first = np.unique(rna["cell_id"], return_index=True)
+    rna_u = {k: v[np.sort(first)] for k, v in rna.items()}
+    for k in rna_u:
+        if k != "cell_id":
+            v = rna_u[k]
+            rna_u[k] = (v - v.mean()) / (v.std() + 1e-12)
+    # isin filters
+    keep = np.isin(t["drug_id"], drug["drug_id"]) & \
+        np.isin(t["cell_id"], rna_u["cell_id"])
+    t = {k: v[keep] for k, v in t.items()}
+    # join drug features then rna features (gather by key index)
+    drug_pos = np.searchsorted(drug["drug_id"], t["drug_id"])
+    rna_sort = np.argsort(rna_u["cell_id"], kind="stable")
+    rna_pos = rna_sort[np.searchsorted(rna_u["cell_id"][rna_sort],
+                                       t["cell_id"])]
+    feats = [t["concentration"]]
+    for k in drug_feature_cols():
+        feats.append(drug[k][drug_pos])
+    for k in rna_cols():
+        feats.append(rna_u[k][rna_pos])
+    return np.stack(feats, 1)
+
+
+def run(fast: bool = False):
+    rep = Reporter("fig12_sequential_de")
+    n = N_RESPONSE // 10 if fast else N_RESPONSE
+    raw = gen_unomt_tables(n_response=n, n_drugs=512, n_cells=256, seed=0)
+
+    t_np = timeit(lambda: numpy_pipeline(raw), warmup=1, iters=3)
+    rep.add("numpy_pipeline", "seconds", t_np, rows=n)
+
+    tbls = {k: Table.from_dict(v) for k, v in raw.items()}
+
+    @jax.jit
+    def jit_pipeline(resp, desc, fp, rna):
+        out = unomt_local_pipeline(resp, desc, fp, rna,
+                                   out_capacity=resp.capacity)
+        return out.to_tensor(["concentration"] + drug_feature_cols()
+                             + rna_cols())
+
+    def run_ours():
+        jax.block_until_ready(jit_pipeline(
+            tbls["response"], tbls["descriptors"], tbls["fingerprints"],
+            tbls["rna"]))
+
+    t_ours = timeit(run_ours, warmup=1, iters=3)
+    rep.add("hptmt_table_engine", "seconds", t_ours, rows=n)
+    rep.add("hptmt_table_engine", "vs_numpy_ratio", t_ours / t_np)
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one bench per paper table/figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``bench,config,metric,value`` CSV rows and writes
+results/bench.json.  Figure map:
+
+    fig4   distributed join scaling            (paper Fig. 4)
+    fig12  sequential data engineering         (paper Fig. 12)
+    fig13  data-parallel data engineering      (paper Figs. 13-15)
+    fig16  DDP deep learning on CPU            (paper Figs. 16/17)
+    kernels  Pallas kernel micro-benchmarks
+    roofline per-(arch×cell×mesh) roofline table (assignment §Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+
+from . import (bench_dataparallel_de, bench_ddp_train, bench_join,
+               bench_kernels, bench_roofline, bench_sequential_de)
+
+BENCHES = {
+    "fig4": bench_join.run,
+    "fig12": bench_sequential_de.run,
+    "fig13": bench_dataparallel_de.run,
+    "fig16": bench_ddp_train.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("bench,config,metric,value")
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        BENCHES[name](fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

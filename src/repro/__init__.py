@@ -1,0 +1,2 @@
+"""repro: HPTMT Parallel Operators in JAX (see DESIGN.md)."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from .store import (  # noqa: F401
+    AsyncCheckpointer, all_steps, latest_step, restore, save,
+)

@@ -1,0 +1,428 @@
+"""Distributed HPTMT table operators (paper §2.1.2, Tables 4–5).
+
+Every distributed operator is *communication ∘ local operator*, exactly the
+paper's recipe:
+
+=================  =======================================================
+distributed op     implementation (paper Table 5)
+=================  =======================================================
+shuffle            hash partition (Pallas radix kernel) + ``all_to_all``
+join               shuffle both sides + local sort-merge join
+broadcast join     ``all_gather`` small side + local join   (beyond-paper)
+groupby            shuffle + local groupby-aggregate
+unique             shuffle + local drop_duplicates
+sort (OrderBy)     sample-sort: local sort + splitter ``all_gather`` +
+                   range partition + ``all_to_all`` + local sort
+difference/        shuffle both sides + local set op
+intersect
+repartition        global-rank range partition + ``all_to_all``
+                   (straggler/skew mitigation)
+=================  =======================================================
+
+All functions here run **inside** ``jax.shard_map`` over the context's row
+axes — the BSP model: every worker executes this same trace; the
+collectives are the only synchronization points.  Use
+:class:`DistributedPipeline` to wrap a whole pipeline in one shard_map
+(one XLA program = one BSP superstep chain).
+
+Static-shape contract: a shuffle can route at most ``slots_per_dest`` rows
+from one sender to one receiver and materialize at most ``out_capacity``
+rows per receiver.  Overflowing rows are dropped and *counted* (returned as
+a metric) — tests and callers size capacities so overflow is zero;
+production configs use ``overcommit`` headroom (default 2x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import local_ops as L
+from .context import HptmtContext
+from .kernel_backend import radix_impl
+from .partition import hash_columns, partition_ids
+from .table import Table
+from ..kernels.hash_partition import radix_histogram_ranks
+
+# --------------------------------------------------------------------------
+# global <-> local adapters
+# --------------------------------------------------------------------------
+
+
+def distribute_table(ctx: HptmtContext, data: Mapping[str, np.ndarray],
+                     capacity_per_shard: int | None = None) -> Table:
+    """Host-side: build a *global* row-sharded Table from numpy columns.
+
+    Rows are block-distributed over the row axes (the paper's row
+    decomposition).  The global table's ``nvalid`` is a ``(world,)`` vector
+    of per-shard counts.
+    """
+    world = ctx.world_size
+    arrays = {k: np.asarray(v) for k, v in data.items()}
+    n = len(next(iter(arrays.values())))
+    per = math.ceil(n / world) if n else 1
+    cap = capacity_per_shard or per
+    if cap < per:
+        raise ValueError(f"capacity_per_shard {cap} < rows/shard {per}")
+    cols, nvalid = {}, np.zeros((world,), np.int32)
+    for s in range(world):
+        lo, hi = s * per, min((s + 1) * per, n)
+        nvalid[s] = hi - lo
+    for k, v in arrays.items():
+        if np.issubdtype(v.dtype, np.floating):
+            v = v.astype(np.float32)
+        else:
+            v = v.astype(np.int32)
+        buf = np.zeros((world, cap), v.dtype)
+        for s in range(world):
+            lo, hi = s * per, min((s + 1) * per, n)
+            buf[s, : hi - lo] = v[lo:hi]
+        cols[k] = jax.device_put(
+            buf.reshape(world * cap),
+            NamedSharding(ctx.mesh, ctx.rows_spec))
+    nvalid = jax.device_put(jnp.asarray(nvalid),
+                            NamedSharding(ctx.mesh, ctx.rows_spec))
+    return Table(columns=cols, nvalid=nvalid)
+
+
+def collect_table(ctx: HptmtContext, table: Table) -> dict[str, np.ndarray]:
+    """Host-side: gather a global row-sharded Table back to numpy (valid
+    rows only, shard order preserved)."""
+    world = ctx.world_size
+    nvalid = np.asarray(table.nvalid).reshape(world)
+    out = {}
+    for k, v in table.columns.items():
+        v = np.asarray(v).reshape(world, -1)
+        out[k] = np.concatenate([v[s, : nvalid[s]] for s in range(world)])
+    return out
+
+
+def _to_local(table: Table) -> Table:
+    """Inside shard_map: nvalid arrives as shape (1,), squeeze to scalar."""
+    return Table(columns=dict(table.columns),
+                 nvalid=table.nvalid.reshape(()))
+
+
+def _to_global(table: Table) -> Table:
+    return Table(columns=dict(table.columns),
+                 nvalid=table.nvalid.reshape((1,)))
+
+
+# --------------------------------------------------------------------------
+# The shuffle — HPTMT's Table communication operator (paper Table 4)
+# --------------------------------------------------------------------------
+
+
+def shuffle_by_pid(ctx: HptmtContext, table: Table, pid: jnp.ndarray,
+                   slots_per_dest: int, out_capacity: int):
+    """Route each valid row to shard ``pid[row]`` via one ``all_to_all``.
+
+    Returns ``(table, dropped)`` where ``dropped`` counts rows lost to the
+    static ``slots_per_dest``/``out_capacity`` bounds (0 when sized right).
+    """
+    world = ctx.world_size
+    cap = table.capacity
+    valid = table.valid_mask
+    # trash partition `world` for padding rows
+    pid = jnp.where(valid, pid, world)
+    hist, ranks = radix_histogram_ranks(pid, world + 1, impl=radix_impl())
+    ok = valid & (ranks < slots_per_dest) & (pid < world)
+    flat = jnp.where(ok, pid * slots_per_dest + ranks,
+                     world * slots_per_dest)
+    nslots = world * slots_per_dest
+
+    def scatter(col):
+        buf = jnp.zeros((nslots + 1,), col.dtype).at[flat].set(col)
+        return buf[:nslots].reshape(world, slots_per_dest)
+
+    sent_valid = (jnp.zeros((nslots + 1,), jnp.bool_).at[flat].set(ok)
+                  [:nslots].reshape(world, slots_per_dest))
+    a2a = partial(jax.lax.all_to_all, axis_name=ctx.row_axes,
+                  split_axis=0, concat_axis=0, tiled=True)
+    recv_valid = a2a(sent_valid).reshape(-1)
+    cols = {}
+    for name in table.names:
+        recv = a2a(scatter(table.columns[name])).reshape(-1)
+        cols[name] = recv
+    received = Table(columns=cols,
+                     nvalid=jnp.sum(recv_valid, dtype=jnp.int32))
+    # received rows are scattered across slots -> compact to front, then
+    # truncate to out_capacity.
+    perm = jnp.argsort(jnp.logical_not(recv_valid), stable=True)
+    n_recv = jnp.sum(recv_valid, dtype=jnp.int32)
+    compacted = received.gather_rows(perm[:out_capacity],
+                                     jnp.minimum(n_recv, out_capacity))
+    sent_dropped = jnp.sum(
+        jnp.maximum(hist[:world] - slots_per_dest, 0), dtype=jnp.int32)
+    recv_dropped = jnp.maximum(n_recv - out_capacity, 0)
+    dropped = jax.lax.psum(sent_dropped, ctx.row_axes) + \
+        jax.lax.psum(recv_dropped, ctx.row_axes)
+    return compacted, dropped
+
+
+def default_shuffle_sizes(ctx: HptmtContext, capacity: int,
+                          overcommit: float = 2.0):
+    world = ctx.world_size
+    slots = max(1, math.ceil(capacity * overcommit / world))
+    out_cap = max(capacity, math.ceil(capacity * overcommit))
+    return slots, out_cap
+
+
+def shuffle(ctx: HptmtContext, table: Table, key_cols: Sequence[str],
+            *, overcommit: float = 2.0,
+            slots_per_dest: int | None = None,
+            out_capacity: int | None = None):
+    """Hash shuffle: co-locate equal keys on the same shard."""
+    s, oc = default_shuffle_sizes(ctx, table.capacity, overcommit)
+    pid = partition_ids(table, list(key_cols), ctx.world_size)
+    return shuffle_by_pid(ctx, table, pid,
+                          slots_per_dest or s, out_capacity or oc)
+
+
+# --------------------------------------------------------------------------
+# Distributed relational operators = shuffle + local op (paper Table 5)
+# --------------------------------------------------------------------------
+
+
+def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
+              left_on: Sequence[str], right_on: Sequence[str] | None = None,
+              how: str = "inner", out_capacity: int | None = None,
+              overcommit: float = 2.0, strategy: str = "shuffle"):
+    """Distributed join (paper Fig. 4 operator).
+
+    ``strategy='shuffle'``: hash-shuffle both sides on the key, local
+    sort-merge join (Cylon's algorithm).  ``strategy='broadcast'``:
+    all_gather the (small) right side and join locally — no shuffle of the
+    big side (beyond-paper optimization; pick when |right| << |left|).
+    """
+    right_on = list(right_on) if right_on is not None else list(left_on)
+    if strategy == "broadcast":
+        g = all_gather_table(ctx, right)
+        out = L.join(left, g, left_on=list(left_on), right_on=right_on,
+                     how=how, out_capacity=out_capacity or left.capacity)
+        return out, jnp.int32(0)
+    # hash both sides with the same key columns -> same pid function
+    lp = partition_ids(left, list(left_on), ctx.world_size)
+    rp_tbl = right.rename(dict(zip(right_on, left_on))) \
+        if right_on != list(left_on) else right
+    rp = partition_ids(rp_tbl, list(left_on), ctx.world_size)
+    ls, loc = default_shuffle_sizes(ctx, left.capacity, overcommit)
+    rs, roc = default_shuffle_sizes(ctx, right.capacity, overcommit)
+    lsh, ldrop = shuffle_by_pid(ctx, left, lp, ls, loc)
+    rsh, rdrop = shuffle_by_pid(ctx, right, rp, rs, roc)
+    out = L.join(lsh, rsh, left_on=list(left_on), right_on=right_on,
+                 how=how, out_capacity=out_capacity or loc)
+    return out, ldrop + rdrop
+
+
+def dist_groupby(ctx: HptmtContext, table: Table, by: Sequence[str],
+                 aggs: Mapping[str, Sequence[str] | str],
+                 overcommit: float = 2.0):
+    """Distributed GroupBy+Aggregate: shuffle on keys + local groupby.
+
+    Note: mean aggregations are computed from shuffled raw rows, so they are
+    exact (not an average-of-averages)."""
+    sh, dropped = shuffle(ctx, table, by, overcommit=overcommit)
+    return L.groupby_aggregate(sh, list(by), aggs), dropped
+
+
+def dist_unique(ctx: HptmtContext, table: Table, subset: Sequence[str],
+                overcommit: float = 2.0):
+    """Paper §4.3: 'the distributed unique operator ensures no duplicate
+    records are used for deep learning across all processes'."""
+    sh, dropped = shuffle(ctx, table, subset, overcommit=overcommit)
+    return L.drop_duplicates(sh, list(subset)), dropped
+
+
+def dist_difference(ctx: HptmtContext, a: Table, b: Table,
+                    on: Sequence[str], overcommit: float = 2.0):
+    ash, d1 = shuffle(ctx, a, on, overcommit=overcommit)
+    bsh, d2 = shuffle(ctx, b, on, overcommit=overcommit)
+    return L.difference(ash, bsh, on=list(on)), d1 + d2
+
+
+def dist_intersect(ctx: HptmtContext, a: Table, b: Table,
+                   on: Sequence[str], overcommit: float = 2.0):
+    ash, d1 = shuffle(ctx, a, on, overcommit=overcommit)
+    bsh, d2 = shuffle(ctx, b, on, overcommit=overcommit)
+    return L.intersect(ash, bsh, on=list(on)), d1 + d2
+
+
+# --------------------------------------------------------------------------
+# Distributed sort (sample sort) — paper Table 5 "Sorting tables"
+# --------------------------------------------------------------------------
+
+
+def dist_sort(ctx: HptmtContext, table: Table, by: Sequence[str],
+              ascending: bool = True, n_samples: int = 32,
+              overcommit: float = 2.0):
+    """Sample-sort: local sort, splitter all_gather, range partition,
+    all_to_all, local sort.  Globally sorted = shard order + local order."""
+    by = list(by)
+    world = ctx.world_size
+    ts = L.sort_values(table, by, ascending=ascending)
+    cap = ts.capacity
+    s = min(n_samples, cap)
+    # evenly sample valid rows (clamp handles nvalid < s)
+    pos = (jnp.arange(s) * jnp.maximum(ts.nvalid, 1)) // s
+    pos = jnp.clip(pos, 0, cap - 1)
+    valid_s = jnp.arange(s) < jnp.minimum(ts.nvalid, s)
+    sample_keys = []
+    for k in by:
+        col = L._sort_key(ts.columns[k], ascending)[pos]
+        col = jnp.where(valid_s, col, L._sentinel_max(col))
+        sample_keys.append(col)
+    gathered = [jax.lax.all_gather(c, ctx.row_axes, tiled=True)
+                for c in sample_keys]                     # (world*s,)
+    iota = jnp.arange(world * s, dtype=jnp.int32)
+    sorted_ops = jax.lax.sort((*gathered, iota), num_keys=len(gathered),
+                              is_stable=True)
+    # world-1 splitters at quantile positions
+    spl_pos = (jnp.arange(1, world) * (world * s)) // world
+    splitters = tuple(op[spl_pos] for op in sorted_ops[:-1])
+    row_keys = tuple(
+        jnp.where(ts.valid_mask,
+                  L._sort_key(ts.columns[k], ascending),
+                  L._sentinel_max(ts.columns[k]))
+        for k in by)
+    pid = _rank_against_splitters(splitters, row_keys)
+    slots, out_cap = default_shuffle_sizes(ctx, cap, overcommit)
+    sh, dropped = shuffle_by_pid(ctx, ts, pid, slots, out_cap)
+    return L.sort_values(sh, by, ascending=ascending), dropped
+
+
+def _rank_against_splitters(splitters: tuple, row_keys: tuple) -> jnp.ndarray:
+    """pid = number of splitters <= key (vectorized lex compare)."""
+    nspl = splitters[0].shape[0]
+    cap = row_keys[0].shape[0]
+    pid = jnp.zeros((cap,), jnp.int32)
+    for i in range(nspl):
+        spl = tuple(s[i] for s in splitters)
+        spl_b = tuple(jnp.broadcast_to(s, (cap,)) for s in spl)
+        le = ~L._tuple_less(row_keys, spl_b)   # splitter <= key
+        pid = pid + le.astype(jnp.int32)
+    return pid
+
+
+# --------------------------------------------------------------------------
+# Repartition / rebalance — skew (straggler) mitigation
+# --------------------------------------------------------------------------
+
+
+def dist_repartition(ctx: HptmtContext, table: Table,
+                     overcommit: float = 1.5):
+    """Exact load rebalance: row global-rank r goes to shard r // ceil(N/W).
+
+    BSP stragglers are dominated by data skew after shuffles (DESIGN.md §4);
+    this restores near-perfect balance with one all_to_all."""
+    world = ctx.world_size
+    nv = table.nvalid
+    counts = jax.lax.all_gather(nv, ctx.row_axes)          # (world,)
+    my = ctx.axis_index()
+    prefix = jnp.sum(jnp.where(jnp.arange(world) < my, counts, 0))
+    total = jnp.sum(counts)
+    target = jnp.maximum((total + world - 1) // world, 1)
+    r = prefix + jnp.arange(table.capacity, dtype=jnp.int32)
+    pid = jnp.minimum(r // target, world - 1).astype(jnp.int32)
+    # one sender contributes at most min(capacity, target) rows to a single
+    # destination, and each destination receives at most target <= capacity
+    # rows in total -> capacity bounds are exact (never drops).
+    return shuffle_by_pid(ctx, table, pid,
+                          slots_per_dest=table.capacity,
+                          out_capacity=table.capacity)
+
+
+# --------------------------------------------------------------------------
+# Distributed column scaling (sklearn StandardScaler with *global* stats)
+# --------------------------------------------------------------------------
+
+
+def dist_standard_scale(ctx: HptmtContext, table: Table,
+                        cols: Sequence[str]) -> Table:
+    """(x - mean) / std per column with mean/std over ALL shards' valid
+    rows (exact psum moments) — the distributed equivalent of the paper's
+    sklearn preprocessing step.  Per-shard scaling would silently change
+    results with parallelism; this keeps them parallelism-invariant."""
+    out = dict(table.columns)
+    valid = table.valid_mask
+    n = jax.lax.psum(table.nvalid.astype(jnp.float32), ctx.row_axes)
+    n = jnp.maximum(n, 1.0)
+    for k in cols:
+        x = out[k].astype(jnp.float32)
+        s1 = jax.lax.psum(jnp.sum(jnp.where(valid, x, 0.0)), ctx.row_axes)
+        s2 = jax.lax.psum(jnp.sum(jnp.where(valid, x * x, 0.0)),
+                          ctx.row_axes)
+        m = s1 / n
+        v = jnp.maximum(s2 / n - m * m, 0.0)
+        out[k] = (x - m) / jnp.sqrt(v + 1e-12)
+    return Table(columns=out, nvalid=table.nvalid)
+
+
+# --------------------------------------------------------------------------
+# Broadcast / gather of tables (paper Table 4: Broadcast for tables)
+# --------------------------------------------------------------------------
+
+
+def all_gather_table(ctx: HptmtContext, table: Table) -> Table:
+    """Replicate a (small) table on every shard: capacity*world rows."""
+    world = ctx.world_size
+    cap = table.capacity
+    valid = table.valid_mask
+    cols = {}
+    for k, v in table.columns.items():
+        g = jax.lax.all_gather(v, ctx.row_axes, tiled=True)
+        cols[k] = g
+    gvalid = jax.lax.all_gather(valid, ctx.row_axes, tiled=True)
+    perm = jnp.argsort(jnp.logical_not(gvalid), stable=True)
+    out = Table(columns={k: v[perm] for k, v in cols.items()},
+                nvalid=jnp.sum(gvalid, dtype=jnp.int32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Whole-pipeline runner: one shard_map = one BSP program
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistributedPipeline:
+    """Wrap a table pipeline ``fn(ctx, *local_tables, **kw) -> pytree`` into
+    a single jitted shard_map program (the paper's single-source,
+    single-runtime execution: data engineering composed as one SPMD
+    program).
+
+    Output pytree leaves: ``Table`` -> row-sharded global table; scalar
+    leaves (e.g. the ``dropped`` counters) are auto-lifted to a leading
+    per-shard axis of size 1 and come back stacked ``(world,)``; other
+    arrays must already carry a leading per-shard axis.
+    """
+
+    ctx: HptmtContext
+    fn: Callable
+
+    def __call__(self, *tables: Table, **kwargs):
+        ctx = self.ctx
+        spec = ctx.rows_spec
+
+        def lift(x):
+            if isinstance(x, Table):
+                return _to_global(x)
+            x = jnp.asarray(x)
+            return x[None] if x.ndim == 0 else x
+
+        def wrapped(*ts):
+            local = [_to_local(t) for t in ts]
+            out = self.fn(ctx, *local, **kwargs)
+            return jax.tree_util.tree_map(
+                lift, out, is_leaf=lambda x: isinstance(x, Table))
+
+        # `spec` is a valid pytree *prefix* for the whole in/out trees
+        f = jax.shard_map(wrapped, mesh=ctx.mesh, in_specs=spec,
+                          out_specs=spec, check_vma=False)
+        return jax.jit(f)(*tables)

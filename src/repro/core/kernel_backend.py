@@ -1,0 +1,35 @@
+"""Select kernel implementations per backend.
+
+Pallas TPU kernels are the *target*; on CPU (this container) the pure-jnp
+references execute instead, and tests exercise the kernels via
+``interpret=True``.  ``REPRO_KERNEL_IMPL`` overrides (ref | pallas |
+pallas_interpret).
+"""
+import os
+
+import jax
+
+
+def backend_platform() -> str:
+    return jax.devices()[0].platform
+
+
+def radix_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if backend_platform() == "tpu" else "ref"
+
+
+def attention_impl() -> str:
+    env = os.environ.get("REPRO_ATTN_IMPL")
+    if env:
+        return env
+    return "pallas" if backend_platform() == "tpu" else "xla"
+
+
+def mamba_impl() -> str:
+    env = os.environ.get("REPRO_MAMBA_IMPL")
+    if env:
+        return env
+    return "pallas" if backend_platform() == "tpu" else "xla"

@@ -1,0 +1,451 @@
+"""Local (single-partition) HPTMT table operators.
+
+These are the paper's Table-2 operators — Select, Project, Union,
+Difference, Intersect, Join, OrderBy, Aggregate, GroupBy (+ the UNOMT
+helpers: unique/drop_duplicates, isin, dropna/fillna, map, astype) —
+implemented as pure, jittable, *static-shape* JAX functions over
+:class:`repro.core.table.Table`.
+
+TPU adaptation notes (see DESIGN.md §2):
+* every op is mask-aware: rows ``>= nvalid`` are padding;
+* local join is **sort-merge** (binary search over sorted keys), not a
+  pointer-chasing hash table — sorting/searching vectorize on the VPU;
+* multi-column keys use an exact vectorized lexicographic binary search
+  (:func:`lex_searchsorted`) — no hash collisions, no int64 packing.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .table import Table, isnull_values, null_like
+
+# --------------------------------------------------------------------------
+# small helpers
+# --------------------------------------------------------------------------
+
+
+def _sentinel_max(col: jax.Array) -> jax.Array:
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, col.dtype)
+    return jnp.asarray(jnp.iinfo(col.dtype).max, col.dtype)
+
+
+def compact(table: Table, keep: jax.Array) -> Table:
+    """Move rows where ``keep`` holds to the front (stable); drop the rest."""
+    keep = keep & table.valid_mask
+    perm = jnp.argsort(jnp.logical_not(keep), stable=True)
+    return table.gather_rows(perm, jnp.sum(keep, dtype=jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Select / Project / head / take / concat
+# --------------------------------------------------------------------------
+
+
+def select(table: Table, mask: jax.Array) -> Table:
+    """Paper's Select: keep rows where ``mask`` (bool (capacity,)) holds."""
+    return compact(table, mask)
+
+
+def project(table: Table, names: Sequence[str]) -> Table:
+    """Paper's Project: keep a subset of columns."""
+    return Table(columns={n: table.columns[n] for n in names},
+                 nvalid=table.nvalid)
+
+
+def head(table: Table, n) -> Table:
+    return table.with_nvalid(jnp.minimum(table.nvalid, jnp.int32(n)))
+
+
+def take(table: Table, idx: jax.Array, count) -> Table:
+    return table.gather_rows(idx, count)
+
+
+def concat(a: Table, b: Table) -> Table:
+    """Union-all of two same-schema tables (capacity = sum of capacities)."""
+    if set(a.names) != set(b.names):
+        raise ValueError(f"schema mismatch: {a.names} vs {b.names}")
+    cap_a, cap_b = a.capacity, b.capacity
+    out_cap = cap_a + cap_b
+    i = jnp.arange(out_cap, dtype=jnp.int32)
+    from_a = i < a.nvalid
+    ia = jnp.clip(i, 0, cap_a - 1)
+    ib = jnp.clip(i - a.nvalid, 0, cap_b - 1)
+    cols = {}
+    for n in a.names:
+        ca, cb = a.columns[n], b.columns[n].astype(a.columns[n].dtype)
+        cols[n] = jnp.where(from_a, ca[ia], cb[ib])
+    return Table(columns=cols, nvalid=a.nvalid + b.nvalid)
+
+
+# --------------------------------------------------------------------------
+# OrderBy (sort_values)
+# --------------------------------------------------------------------------
+
+
+def _sort_key(col: jax.Array, ascending: bool) -> jax.Array:
+    if ascending:
+        return col
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        return -col
+    return ~col  # two's-complement: exact order reversal, no overflow
+
+
+def sort_values(table: Table, by: Sequence[str],
+                ascending: bool | Sequence[bool] = True) -> Table:
+    """Paper's OrderBy: stable multi-key sort; padding rows stay at the end."""
+    by = list(by)
+    if isinstance(ascending, bool):
+        ascending = [ascending] * len(by)
+    invalid = (~table.valid_mask).astype(jnp.int32)
+    keys = [_sort_key(table.columns[k], a) for k, a in zip(by, ascending)]
+    iota = jnp.arange(table.capacity, dtype=jnp.int32)
+    out = jax.lax.sort((invalid, *keys, iota), num_keys=1 + len(keys),
+                       is_stable=True)
+    perm = out[-1]
+    return table.gather_rows(perm, table.nvalid)
+
+
+# --------------------------------------------------------------------------
+# Lexicographic vectorized binary search (exact, multi-key, static shape)
+# --------------------------------------------------------------------------
+
+
+def _tuple_less(a: tuple, b: tuple) -> jax.Array:
+    """a < b lexicographically (element-wise over vectors)."""
+    res = jnp.zeros(a[0].shape, bool)
+    eq = jnp.ones(a[0].shape, bool)
+    for x, y in zip(a, b):
+        res = res | (eq & (x < y))
+        eq = eq & (x == y)
+    return res
+
+
+def lex_searchsorted(sorted_keys: tuple, query_keys: tuple,
+                     side: str = "left") -> jax.Array:
+    """``searchsorted`` over a tuple of parallel sorted key columns.
+
+    ``sorted_keys[i]`` all share shape ``(n,)`` and are lexicographically
+    sorted; ``query_keys[i]`` share shape ``(m,)``.  Returns int32 ``(m,)``
+    insertion points.  Exact (comparison-based), O(m log n).
+    """
+    n = sorted_keys[0].shape[0]
+    m = query_keys[0].shape[0]
+    lo = jnp.zeros((m,), jnp.int32)
+    hi = jnp.full((m,), n, jnp.int32)
+    iters = max(1, int(n - 1).bit_length() + 1) if n > 0 else 1
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        midc = jnp.clip(mid, 0, n - 1)
+        at_mid = tuple(k[midc] for k in sorted_keys)
+        if side == "left":
+            go_right = _tuple_less(at_mid, query_keys)        # k[mid] < q
+        else:
+            go_right = ~_tuple_less(query_keys, at_mid)       # k[mid] <= q
+        go_right = go_right & (mid < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def _sorted_keys_with_sentinel(table: Table, by: Sequence[str]):
+    """Sort table by ``by``; overwrite padding keys with +max sentinels so the
+    full-capacity key arrays are globally sorted."""
+    ts = sort_values(table, by)
+    valid = ts.valid_mask
+    keys = []
+    for k in by:
+        col = ts.columns[k]
+        keys.append(jnp.where(valid, col, _sentinel_max(col)))
+    return ts, tuple(keys)
+
+
+# --------------------------------------------------------------------------
+# Unique / drop_duplicates
+# --------------------------------------------------------------------------
+
+
+def drop_duplicates(table: Table, subset: Sequence[str] | None = None) -> Table:
+    """Keep the first occurrence of each distinct key (paper: Unique)."""
+    subset = list(subset) if subset is not None else list(table.names)
+    ts = sort_values(table, subset)
+    valid = ts.valid_mask
+    neq_prev = jnp.zeros(ts.capacity, bool)
+    for k in subset:
+        col = ts.columns[k]
+        prev = jnp.roll(col, 1)
+        neq_prev = neq_prev | (col != prev)
+    first = jnp.arange(ts.capacity) == 0
+    boundary = (first | neq_prev) & valid
+    return compact(ts, boundary)
+
+
+unique = drop_duplicates
+
+
+# --------------------------------------------------------------------------
+# GroupBy + Aggregate
+# --------------------------------------------------------------------------
+
+_AGGS = ("sum", "count", "mean", "min", "max")
+
+
+def groupby_aggregate(table: Table, by: Sequence[str],
+                      aggs: Mapping[str, Sequence[str] | str]) -> Table:
+    """Paper's GroupBy followed by Aggregate.
+
+    ``aggs`` maps value-column name -> aggregation(s) in
+    {sum,count,mean,min,max}.  Output columns are named ``{col}_{agg}``;
+    one row per distinct key, capacity preserved.
+    """
+    by = list(by)
+    ts = sort_values(table, by)
+    valid = ts.valid_mask
+    cap = ts.capacity
+    neq_prev = jnp.zeros(cap, bool)
+    for k in by:
+        col = ts.columns[k]
+        neq_prev = neq_prev | (col != jnp.roll(col, 1))
+    boundary = ((jnp.arange(cap) == 0) | neq_prev) & valid
+    ngroups = jnp.sum(boundary, dtype=jnp.int32)
+    seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1          # 0-based
+    # padding rows -> trash segment (cap-1 is free whenever padding exists)
+    seg = jnp.where(valid, seg, cap - 1)
+
+    out_cols: dict[str, jax.Array] = {}
+    for k in by:
+        out_cols[k] = ts.columns[k]
+    counts = jax.ops.segment_sum(valid.astype(jnp.float32), seg,
+                                 num_segments=cap)
+    for col_name, ops in aggs.items():
+        if isinstance(ops, str):
+            ops = [ops]
+        col = ts.columns[col_name]
+        fcol = col.astype(jnp.float32)
+        for op in ops:
+            if op not in _AGGS:
+                raise ValueError(f"unknown aggregation {op!r}")
+            if op == "sum":
+                v = jax.ops.segment_sum(jnp.where(valid, fcol, 0.0), seg, cap)
+            elif op == "count":
+                v = counts
+            elif op == "mean":
+                s = jax.ops.segment_sum(jnp.where(valid, fcol, 0.0), seg, cap)
+                v = s / jnp.maximum(counts, 1.0)
+            elif op == "min":
+                v = jax.ops.segment_min(
+                    jnp.where(valid, fcol, jnp.inf), seg, cap)
+            elif op == "max":
+                v = jax.ops.segment_max(
+                    jnp.where(valid, fcol, -jnp.inf), seg, cap)
+            out_cols[f"{col_name}_{op}"] = v
+
+    # segment g's result sits at index g; boundary row g sits at the g-th
+    # boundary position — compacting boundary rows aligns keys with index g.
+    key_tbl = compact(Table(columns={k: out_cols[k] for k in by},
+                            nvalid=ts.nvalid), boundary)
+    cols = dict(key_tbl.columns)
+    for name, v in out_cols.items():
+        if name not in by:
+            cols[name] = v  # already indexed by group id
+    return Table(columns=cols, nvalid=ngroups)
+
+
+def aggregate(table: Table, col: str, op: str) -> jax.Array:
+    """Whole-column masked reduction -> scalar (paper's Aggregate)."""
+    valid = table.valid_mask
+    x = table.columns[col].astype(jnp.float32)
+    n = jnp.maximum(table.nvalid.astype(jnp.float32), 1.0)
+    if op == "sum":
+        return jnp.sum(jnp.where(valid, x, 0.0))
+    if op == "count":
+        return table.nvalid.astype(jnp.float32)
+    if op == "mean":
+        return jnp.sum(jnp.where(valid, x, 0.0)) / n
+    if op == "min":
+        return jnp.min(jnp.where(valid, x, jnp.inf))
+    if op == "max":
+        return jnp.max(jnp.where(valid, x, -jnp.inf))
+    if op == "std":
+        m = jnp.sum(jnp.where(valid, x, 0.0)) / n
+        v = jnp.sum(jnp.where(valid, (x - m) ** 2, 0.0)) / n
+        return jnp.sqrt(v)
+    raise ValueError(f"unknown aggregation {op!r}")
+
+
+# --------------------------------------------------------------------------
+# Join (sort-merge, static output capacity)
+# --------------------------------------------------------------------------
+
+
+def join(left: Table, right: Table, *,
+         left_on: Sequence[str], right_on: Sequence[str] | None = None,
+         how: str = "inner", out_capacity: int | None = None,
+         suffix: str = "_r", return_overflow: bool = False):
+    """Paper's Join: sort-merge inner/left join with static output capacity.
+
+    The right table is sorted by its keys; each left row binary-searches its
+    match range ``[lo, hi)``; output slot ``j`` is mapped back to its
+    (left row, match offset) pair with a second searchsorted — fully
+    vectorized, no dynamic shapes.  ``out_capacity`` defaults to
+    ``left.capacity`` (overflowing matches are dropped and counted).
+    """
+    if how not in ("inner", "left"):
+        raise ValueError("how must be 'inner' or 'left'")
+    left_on = list(left_on)
+    right_on = list(right_on) if right_on is not None else left_on
+    out_cap = out_capacity or left.capacity
+
+    rs, rkeys = _sorted_keys_with_sentinel(right, right_on)
+    qkeys = tuple(left.columns[k].astype(rs.columns[rk].dtype)
+                  for k, rk in zip(left_on, right_on))
+    lo = lex_searchsorted(rkeys, qkeys, side="left")
+    hi = lex_searchsorted(rkeys, qkeys, side="right")
+    lo = jnp.minimum(lo, right.nvalid)
+    hi = jnp.minimum(hi, right.nvalid)
+    lvalid = left.valid_mask
+    match_counts = jnp.where(lvalid, hi - lo, 0)
+    if how == "left":
+        emit_counts = jnp.where(lvalid & (match_counts == 0), 1, match_counts)
+    else:
+        emit_counts = match_counts
+
+    cum = jnp.cumsum(emit_counts)                       # inclusive
+    offs = cum - emit_counts                            # exclusive
+    total = cum[-1] if left.capacity > 0 else jnp.int32(0)
+
+    j = jnp.arange(out_cap, dtype=jnp.int32)
+    lrow = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    lrow = jnp.clip(lrow, 0, left.capacity - 1)
+    within = j - offs[lrow]
+    matched = within < match_counts[lrow]
+    rrow = jnp.clip(lo[lrow] + within, 0, max(right.capacity - 1, 0))
+    out_valid = j < total
+
+    cols: dict[str, jax.Array] = {}
+    for n in left.names:
+        cols[n] = left.columns[n][lrow]
+    drop_keys = set(right_on) if left_on == right_on else set()
+    for n in rs.names:
+        if n in drop_keys:
+            continue
+        name = n + suffix if n in cols else n
+        v = rs.columns[n][rrow]
+        if how == "left":
+            v = jnp.where(matched, v, null_like(v))
+        cols[name] = v
+    out = Table(columns=cols, nvalid=jnp.minimum(total, out_cap))
+    if return_overflow:
+        return out, jnp.maximum(total - out_cap, 0)
+    return out
+
+
+def cartesian_product(left: Table, right: Table, out_capacity: int,
+                      suffix: str = "_r") -> Table:
+    """Paper's Cartesian Product (static output capacity)."""
+    n2 = jnp.maximum(right.nvalid, 1)
+    j = jnp.arange(out_capacity, dtype=jnp.int32)
+    lrow = jnp.clip(j // n2, 0, max(left.capacity - 1, 0))
+    rrow = jnp.clip(j % n2, 0, max(right.capacity - 1, 0))
+    total = left.nvalid * right.nvalid
+    cols = {n: left.columns[n][lrow] for n in left.names}
+    for n in right.names:
+        name = n + suffix if n in cols else n
+        cols[name] = right.columns[n][rrow]
+    return Table(columns=cols, nvalid=jnp.minimum(total, out_capacity))
+
+
+# --------------------------------------------------------------------------
+# Membership + set operators
+# --------------------------------------------------------------------------
+
+
+def isin(table: Table, col: str, values: Table, values_col: str) -> jax.Array:
+    """Bool mask: table[col] present among valid values[values_col]."""
+    vs, vkeys = _sorted_keys_with_sentinel(values, [values_col])
+    q = (table.columns[col].astype(vs.columns[values_col].dtype),)
+    lo = lex_searchsorted(vkeys, q, side="left")
+    hi = lex_searchsorted(vkeys, q, side="right")
+    lo = jnp.minimum(lo, values.nvalid)
+    hi = jnp.minimum(hi, values.nvalid)
+    return (hi > lo) & table.valid_mask
+
+
+def _semi_mask(left: Table, right: Table, on: Sequence[str]) -> jax.Array:
+    rs, rkeys = _sorted_keys_with_sentinel(right, list(on))
+    q = tuple(left.columns[k].astype(rs.columns[k].dtype) for k in on)
+    lo = lex_searchsorted(rkeys, q, side="left")
+    hi = lex_searchsorted(rkeys, q, side="right")
+    lo = jnp.minimum(lo, right.nvalid)
+    hi = jnp.minimum(hi, right.nvalid)
+    return (hi > lo) & left.valid_mask
+
+
+def intersect(a: Table, b: Table, on: Sequence[str] | None = None) -> Table:
+    """Paper's Intersect: distinct rows of ``a`` present in ``b``."""
+    on = list(on) if on is not None else list(a.names)
+    return drop_duplicates(compact(a, _semi_mask(a, b, on)), on)
+
+
+def difference(a: Table, b: Table, on: Sequence[str] | None = None) -> Table:
+    """Paper's Difference: rows of ``a`` with no match in ``b``."""
+    on = list(on) if on is not None else list(a.names)
+    return compact(a, a.valid_mask & ~_semi_mask(a, b, on))
+
+
+def union(a: Table, b: Table) -> Table:
+    """Paper's Union: concat + dedup."""
+    return drop_duplicates(concat(a, b))
+
+
+# --------------------------------------------------------------------------
+# Null handling (UNOMT ops: isnull / notnull / dropna / fillna)
+# --------------------------------------------------------------------------
+
+
+def isnull(table: Table, col: str) -> jax.Array:
+    return isnull_values(table.columns[col]) & table.valid_mask
+
+
+def dropna(table: Table, subset: Sequence[str] | None = None) -> Table:
+    subset = list(subset) if subset is not None else list(table.names)
+    bad = jnp.zeros(table.capacity, bool)
+    for k in subset:
+        bad = bad | isnull_values(table.columns[k])
+    return compact(table, ~bad)
+
+
+def fillna(table: Table, values: Mapping[str, float]) -> Table:
+    cols = dict(table.columns)
+    for k, v in values.items():
+        col = cols[k]
+        cols[k] = jnp.where(isnull_values(col),
+                            jnp.asarray(v, col.dtype), col)
+    return Table(columns=cols, nvalid=table.nvalid)
+
+
+# --------------------------------------------------------------------------
+# Column-wise math used by the UNOMT pipeline (scikit-learn-style scaling)
+# --------------------------------------------------------------------------
+
+
+def standard_scale(table: Table, cols: Sequence[str]) -> Table:
+    """(x - mean) / std per column over valid rows (sklearn StandardScaler)."""
+    out = dict(table.columns)
+    valid = table.valid_mask
+    n = jnp.maximum(table.nvalid.astype(jnp.float32), 1.0)
+    for k in cols:
+        x = out[k].astype(jnp.float32)
+        m = jnp.sum(jnp.where(valid, x, 0.0)) / n
+        v = jnp.sum(jnp.where(valid, (x - m) ** 2, 0.0)) / n
+        out[k] = (x - m) / jnp.sqrt(v + 1e-12)
+    return Table(columns=out, nvalid=table.nvalid)

@@ -1,0 +1,66 @@
+"""Hash partitioning for table shuffles (Cylon's hash-partition step).
+
+Key hashing uses a murmur3-style 32-bit finalizer (the same family Cylon /
+Arrow use) combined across key columns; partition id = hash % P.  The
+histogram/rank hot loop is the ``kernels/hash_partition`` Pallas kernel
+(pure-jnp ref on CPU).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from ..kernels.hash_partition import partition_plan
+from .table import Table
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 over uint32."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _col_bits(col: jnp.ndarray) -> jnp.ndarray:
+    import jax
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        # normalize -0.0 to +0.0 so equal keys hash equal
+        col = jnp.where(col == 0.0, jnp.zeros_like(col), col)
+        return jax.lax.bitcast_convert_type(col.astype(jnp.float32),
+                                            jnp.uint32)
+    return jax.lax.bitcast_convert_type(col.astype(jnp.int32), jnp.uint32)
+
+
+def hash_columns(cols: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Combined 32-bit hash of parallel key columns."""
+    h = jnp.full(cols[0].shape, jnp.uint32(0x9E3779B9))
+    for c in cols:
+        bits = _col_bits(c)
+        h = _mix32(h ^ (bits + jnp.uint32(0x9E3779B9)
+                        + (h << 6) + (h >> 2)))
+    return h
+
+
+def partition_ids(table: Table, key_cols: Sequence[str],
+                  num_partitions: int) -> jnp.ndarray:
+    """Partition id per row; padding rows get id 0 (callers mask them)."""
+    h = hash_columns([table.columns[k] for k in key_cols])
+    pid = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+    return jnp.where(table.valid_mask, pid, 0)
+
+
+def plan_partitions(table: Table, key_cols: Sequence[str],
+                    num_partitions: int, impl: str = "ref"):
+    """(hist, dest-slot) over *valid* rows only.
+
+    Padding rows are routed to a one-past-the-end trash partition so they
+    never consume real slots.
+    """
+    pid = partition_ids(table, key_cols, num_partitions)
+    pid = jnp.where(table.valid_mask, pid, num_partitions)
+    hist, dest = partition_plan(pid, num_partitions + 1, impl=impl)
+    return hist[:num_partitions], dest, pid

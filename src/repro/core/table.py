@@ -1,0 +1,188 @@
+"""HPTMT Table abstraction.
+
+The paper's data-engineering side is built on Arrow-style columnar tables
+(Cylon).  On TPU we need *static shapes*, so a :class:`Table` is a
+struct-of-columns where every column is a fixed-``capacity`` 1-D ``jnp``
+array and ``nvalid`` (a traced scalar) says how many leading rows are live.
+
+Representation invariants
+-------------------------
+* every column has shape ``(capacity,)`` and the same capacity;
+* valid rows are **compacted to the front**: rows ``[0, nvalid)`` are live,
+  rows ``[nvalid, capacity)`` are padding (arbitrary values);
+* nulls inside live rows are encoded with sentinels (`INT_NULL`, NaN) the
+  way Arrow uses validity bitmaps — see :func:`isnull`.
+
+``Table`` is registered as a JAX pytree, so tables flow through ``jit``,
+``shard_map``, ``scan`` and can be donated/sharded like any other value.
+Strings are dictionary-encoded to int32 ids *before* entering the engine
+(TPUs have no string type; Arrow dictionary encoding is the standard
+equivalent) — see ``repro.data.dictionary``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_NULL = np.iinfo(np.int32).min
+FLOAT_NULL = np.nan
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """Columnar table with static capacity and a dynamic valid-row count."""
+
+    columns: dict[str, jax.Array]          # name -> (capacity,) array
+    nvalid: jax.Array                      # int32 scalar
+
+    # ---------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        names = tuple(self.columns.keys())
+        children = tuple(self.columns[n] for n in names) + (self.nvalid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-1]))
+        return cls(columns=cols, nvalid=children[-1])
+
+    # ------------------------------------------------------------- properties
+    @property
+    def capacity(self) -> int:
+        if not self.columns:
+            return 0
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self.columns.keys())
+
+    @property
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.nvalid
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def from_dict(
+        cls,
+        data: Mapping[str, Any],
+        capacity: int | None = None,
+    ) -> "Table":
+        """Build a table from numpy/array columns, padding to ``capacity``."""
+        arrays = {k: np.asarray(v) for k, v in data.items()}
+        if not arrays:
+            return cls(columns={}, nvalid=jnp.int32(0))
+        n = len(next(iter(arrays.values())))
+        for k, v in arrays.items():
+            if v.ndim != 1:
+                raise ValueError(f"column {k!r} must be 1-D, got {v.shape}")
+            if len(v) != n:
+                raise ValueError("all columns must have equal length")
+        cap = capacity if capacity is not None else max(n, 1)
+        if cap < n:
+            raise ValueError(f"capacity {cap} < number of rows {n}")
+        cols = {}
+        for k, v in arrays.items():
+            if np.issubdtype(v.dtype, np.floating):
+                v = v.astype(np.float32)
+                pad = np.zeros(cap - n, np.float32)
+            elif np.issubdtype(v.dtype, np.integer) or v.dtype == np.bool_:
+                v = v.astype(np.int32)
+                pad = np.zeros(cap - n, np.int32)
+            else:
+                raise TypeError(
+                    f"column {k!r} dtype {v.dtype} unsupported; dictionary-"
+                    "encode strings first (repro.data.dictionary)")
+            cols[k] = jnp.asarray(np.concatenate([v, pad]))
+        return cls(columns=cols, nvalid=jnp.int32(n))
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        """Materialize only the valid rows (host-side, non-jittable)."""
+        n = int(self.nvalid)
+        return {k: np.asarray(v)[:n] for k, v in self.columns.items()}
+
+    def to_tensor(self, names: Sequence[str] | None = None) -> jax.Array:
+        """Stage-3 of the paper: Table -> dense feature tensor.
+
+        Returns a ``(capacity, n_cols)`` float32 tensor (padding rows are
+        zeroed) — the hand-off from data engineering to data analytics.
+        """
+        names = list(names) if names is not None else list(self.names)
+        mask = self.valid_mask
+        cols = [
+            jnp.where(mask, self.columns[n].astype(jnp.float32), 0.0)
+            for n in names
+        ]
+        return jnp.stack(cols, axis=1)
+
+    # ---------------------------------------------------------------- helpers
+    def replace_columns(self, columns: dict[str, jax.Array]) -> "Table":
+        return Table(columns=columns, nvalid=self.nvalid)
+
+    def with_nvalid(self, nvalid) -> "Table":
+        return Table(columns=dict(self.columns),
+                     nvalid=jnp.asarray(nvalid, jnp.int32))
+
+    def gather_rows(self, idx: jax.Array, nvalid) -> "Table":
+        """New table whose row ``i`` is this table's row ``idx[i]``."""
+        cols = {k: v[idx] for k, v in self.columns.items()}
+        return Table(columns=cols, nvalid=jnp.asarray(nvalid, jnp.int32))
+
+    def pad_to(self, capacity: int) -> "Table":
+        """Grow capacity (no-op if already >=)."""
+        cap = self.capacity
+        if capacity < cap:
+            raise ValueError("pad_to cannot shrink; use head()")
+        if capacity == cap:
+            return self
+        cols = {
+            k: jnp.concatenate(
+                [v, jnp.zeros((capacity - cap,), v.dtype)])
+            for k, v in self.columns.items()
+        }
+        return Table(columns=cols, nvalid=self.nvalid)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        cols = {mapping.get(k, k): v for k, v in self.columns.items()}
+        return Table(columns=cols, nvalid=self.nvalid)
+
+    def add_prefix(self, prefix: str) -> "Table":
+        return Table(columns={prefix + k: v for k, v in self.columns.items()},
+                     nvalid=self.nvalid)
+
+    def astype(self, dtypes: Mapping[str, Any]) -> "Table":
+        cols = dict(self.columns)
+        for k, dt in dtypes.items():
+            cols[k] = cols[k].astype(dt)
+        return Table(columns=cols, nvalid=self.nvalid)
+
+    def map_column(self, name: str, fn: Callable[[jax.Array], jax.Array],
+                   out: str | None = None) -> "Table":
+        cols = dict(self.columns)
+        cols[out or name] = fn(cols[name])
+        return Table(columns=cols, nvalid=self.nvalid)
+
+
+def null_like(col: jax.Array) -> jax.Array:
+    """A column of nulls with the same shape/dtype."""
+    if _is_float(col):
+        return jnp.full_like(col, FLOAT_NULL)
+    return jnp.full_like(col, INT_NULL)
+
+
+def isnull_values(col: jax.Array) -> jax.Array:
+    if _is_float(col):
+        return jnp.isnan(col)
+    return col == INT_NULL

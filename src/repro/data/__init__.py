@@ -1,0 +1,1 @@
+from . import dictionary, synthetic, unomt  # noqa: F401

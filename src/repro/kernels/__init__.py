@@ -1,0 +1,4 @@
+"""Pallas TPU kernels: each subpackage has kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit'd wrapper + backend dispatch), ref.py (pure-jnp
+oracle used for interpret-mode validation)."""
+from . import flash_attention, hash_partition, mamba_scan  # noqa: F401

@@ -1,0 +1,17 @@
+"""Jitted wrapper for the flash attention kernel with backend dispatch."""
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "ref",
+                    bq: int = 512, bk: int = 512):
+    """Fused attention: impl in {'ref', 'pallas', 'pallas_interpret'}."""
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for fused attention (GQA + causal)."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  scale: float | None = None):
+    """q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    fp32 math throughout — the tolerance anchor for the Pallas kernel.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned
+        kj = jnp.arange(Skv)[None, :]
+        s = jnp.where(kj > qi, -jnp.inf, s)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

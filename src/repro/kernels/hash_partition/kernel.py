@@ -1,0 +1,61 @@
+"""Pallas TPU radix histogram + within-tile rank kernel.
+
+Tiling: the row axis is blocked into ``(n_tiles, tile)``; each grid step
+loads one ``(1, tile)`` slab of partition ids into VMEM, materializes the
+``(tile, P)`` one-hot occupancy matrix in VREGs and reduces it two ways:
+
+* per-tile histogram  ``(1, P)``      (sum over rows), and
+* within-tile ranks   ``(1, tile)``   (exclusive cumsum over rows, gathered
+  at each row's own partition column).
+
+The cross-tile exclusive scan (cheap, ``(n_tiles, P)``) is composed outside
+the kernel in ``ops.py`` — keeping the kernel embarrassingly parallel over
+tiles (``dimension_semantics=("parallel",)``).
+
+VMEM budget: tile=1024, P<=512 -> one-hot is 1024*512*4 B = 2 MiB, well
+under the ~16 MiB/core VMEM of TPU v5e.  ``tile`` and ``P`` are both
+hardware-aligned (multiples of 128 recommended).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pid_ref, hist_ref, rank_ref, *, num_partitions: int):
+    pid = pid_ref[0, :]                                    # (tile,)
+    tile = pid.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tile, num_partitions), 1)
+    onehot = (pid[:, None] == cols).astype(jnp.int32)      # (tile, P)
+    hist_ref[0, :] = jnp.sum(onehot, axis=0)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    rank_ref[0, :] = jnp.sum(excl * onehot, axis=1)
+
+
+def radix_histogram_ranks_tiles(pid_tiles: jnp.ndarray, num_partitions: int,
+                                *, interpret: bool = False):
+    """``pid_tiles``: int32 ``(n_tiles, tile)`` -> (hist ``(n_tiles, P)``,
+    ranks ``(n_tiles, tile)``)."""
+    n_tiles, tile = pid_tiles.shape
+    kern = functools.partial(_kernel, num_partitions=num_partitions)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, num_partitions), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, num_partitions), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(pid_tiles)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the radix histogram/rank kernel.
+
+Given partition ids ``pid`` (int32 ``(n,)`` in ``[0, num_partitions)``),
+produce:
+
+* ``hist``  — ``(num_partitions,)`` int32 row counts per partition;
+* ``ranks`` — ``(n,)`` int32 stable rank of each row *within* its partition
+  (the i-th row with pid p gets rank i, in original row order).
+
+This is the compute hot-spot of the HPTMT table Shuffle (Cylon's hash
+partitioning) and of MoE token dispatch — both are "scatter rows into
+buckets" (DESIGN.md §2).
+"""
+import jax.numpy as jnp
+
+
+def radix_histogram_ranks_ref(pid: jnp.ndarray, num_partitions: int):
+    onehot = (pid[:, None] == jnp.arange(num_partitions, dtype=pid.dtype)
+              [None, :]).astype(jnp.int32)
+    hist = jnp.sum(onehot, axis=0)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    ranks = jnp.sum(excl * onehot, axis=1)
+    return hist, ranks

@@ -1,0 +1,1 @@
+from .ops import selective_scan  # noqa: F401

@@ -1,0 +1,22 @@
+"""Jitted wrapper for the selective-scan kernel with backend dispatch."""
+import functools
+
+import jax
+
+from .kernel import selective_scan_pallas
+from .ref import selective_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "be", "chunk"))
+def selective_scan(x, delta, A, Bm, Cm, D, *, impl: str = "ref",
+                   be: int = 256, chunk: int = 256):
+    """Mamba-1 selective scan.  impl: 'ref' | 'pallas' | 'pallas_interpret'.
+
+    Returns y (B,S,E).  (The ref additionally returns the final state; the
+    kernel path recomputes it on demand — decode uses the step form in
+    ``repro.models.mamba``.)
+    """
+    if impl == "ref":
+        return selective_scan_ref(x, delta, A, Bm, Cm, D)[0]
+    return selective_scan_pallas(x, delta, A, Bm, Cm, D, be=be, chunk=chunk,
+                                 interpret=(impl == "pallas_interpret"))

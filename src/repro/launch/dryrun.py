@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# backend init).  This file is the ONLY place the 512-device placeholder
+# mesh is created (assignment MULTI-POD DRY-RUN step 0).
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) combination, build the step
+function (train_step / prefill / serve_step), ``.lower().compile()`` it
+against ShapeDtypeStruct stand-ins (no allocation), print
+``memory_analysis()`` / ``cost_analysis()``, and record the roofline terms
+(repro.roofline) into a JSON results file.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch qwen3-moe-235b-a22b] [--cell train_4k] [--mesh both]
+        [--out results/dryrun.json] [--overrides k=v,...]
+
+Results accumulate incrementally; cells already present are skipped unless
+--force.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, cells_for, get_config
+from ..models import model as M
+from ..models.sharding import make_policy
+from ..optim import adamw
+from ..roofline.analysis import analyze
+from . import specs as SP
+from .mesh import make_production_mesh
+
+
+def build_lowered(cfg, cell: str, mesh, *, donate: bool = True):
+    """Lower the cell's step function on `mesh`; returns jax Lowered."""
+    kind = SHAPES[cell].kind
+    if kind == "train":
+        policy = make_policy(mesh, cfg.train.sharding)
+        opt_cfg = adamw.AdamWConfig(
+            moment_dtype=cfg.train.opt_dtype)
+        sp = SP.input_specs(cfg, cell, policy, opt_cfg)
+        step = M.make_train_step(cfg, policy, opt_cfg)
+        fn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+        return fn.lower(sp["params"], sp["opt_state"], sp["batch"])
+    if kind == "prefill":
+        policy = make_policy(mesh, "fsdp_tp")        # serving: 2D weights
+        sp = SP.input_specs(cfg, cell, policy)
+        sh = SHAPES[cell]
+        prefill = M.make_prefill(cfg, policy, decode_len=sh.seq_len)
+        fn = jax.jit(prefill)
+        return fn.lower(sp["params"], sp["batch"])
+    # decode
+    policy = make_policy(mesh, "fsdp_tp")
+    sp = SP.input_specs(cfg, cell, policy)
+    serve = M.make_serve_step(cfg, policy)
+    fn = jax.jit(serve, donate_argnums=(1,) if donate else ())
+    return fn.lower(sp["params"], sp["caches"], sp["tokens"],
+                    sp["cache_len"])
+
+
+def run_cell(arch: str, cell: str, multi_pod: bool, overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, train=dataclasses.replace(cfg.train, **overrides))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    lowered = build_lowered(cfg, cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    roof = analyze(compiled, arch=arch, cell=cell, mesh_desc=mesh_desc,
+                   n_chips=n_chips, cfg=cfg)
+    rec = roof.to_dict()
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+    rec["ok"] = True
+    # the assignment asks these to be printed:
+    try:
+        print(compiled.memory_analysis())
+    except Exception as e:            # pragma: no cover
+        print("memory_analysis unavailable:", e)
+    cost = compiled.cost_analysis()
+    print({k: v for k, v in (cost[0] if isinstance(cost, list)
+                             else cost).items()
+           if k in ("flops", "bytes accessed")})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--cell", default=None,
+                    help="shape cell (default: all for the arch)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--overrides", default=None,
+                    help="TrainSettings overrides k=v[,k=v...] "
+                         "(ints/floats/strs)")
+    args = ap.parse_args()
+
+    overrides = None
+    if args.overrides:
+        overrides = {}
+        for kv in args.overrides.split(","):
+            k, v = kv.split("=")
+            if v in ("True", "true"):
+                v = True
+            elif v in ("False", "false"):
+                v = False
+            else:
+                try:
+                    v = int(v)
+                except ValueError:
+                    try:
+                        v = float(v)
+                    except ValueError:
+                        pass
+            overrides[k] = v
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        cells = [args.cell] if args.cell else list(cells_for(arch))
+        for cell in cells:
+            for mp in meshes:
+                mesh_desc = "2x16x16" if mp else "16x16"
+                key = f"{args.tag}/{arch}/{cell}/{mesh_desc}"
+                if key in results and results[key].get("ok") \
+                        and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key}", flush=True)
+                try:
+                    rec = run_cell(arch, cell, mp, overrides)
+                except Exception as e:
+                    rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {key}: {rec['error']}", flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec.get("ok"):
+                    print(f"[ok  ] {key} compute={rec['compute_s']:.4f}s "
+                          f"memory={rec['memory_s']:.4f}s "
+                          f"collective={rec['collective_s']:.4f}s "
+                          f"bound={rec['bound']} "
+                          f"(compile {rec['compile_s']}s)", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"done: {n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+The same pattern shannon/kernels uses: weak-type-correct, shardable, no
+device allocation.  Every struct carries its NamedSharding so
+``jit(...).lower(**specs)`` sees the intended distribution."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchConfig
+from ..models import model as M
+from ..models.sharding import Policy
+from ..optim import adamw
+
+F32 = jnp.float32
+
+
+def _sds(shape, dtype, policy: Policy, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=policy.named(spec))
+
+
+def _batch_spec(policy: Policy, B: int) -> P:
+    """Shard batch over (pod, data) when divisible, else replicate."""
+    world_b = 1
+    for a in policy.batch_axes:
+        world_b *= policy.mesh.shape[a]
+    return P(policy.batch_axes) if B % world_b == 0 else P(None)
+
+
+def train_batch_specs(cfg: ArchConfig, cell: str, policy: Policy):
+    sh = SHAPES[cell]
+    B, S = sh.global_batch, sh.seq_len
+    bs = _batch_spec(policy, B)
+    d = {
+        "tokens": _sds((B, S), jnp.int32, policy, P(*bs, None)),
+        "labels": _sds((B, S), jnp.int32, policy, P(*bs, None)),
+    }
+    if cfg.frontend == "vision":
+        d["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                 jnp.bfloat16, policy, P(*bs, None, None))
+    if cfg.is_encdec:
+        d["frames"] = _sds((B, S // cfg.enc_len_ratio, cfg.d_model),
+                           jnp.bfloat16, policy, P(*bs, None, None))
+    return d
+
+
+def prefill_batch_specs(cfg: ArchConfig, cell: str, policy: Policy):
+    d = train_batch_specs(cfg, cell, policy)
+    d.pop("labels")
+    return d
+
+
+def cache_specs(cfg: ArchConfig, cell: str, policy: Policy):
+    """Decode-shape KV/SSM cache stand-ins, seq sharded over model."""
+    sh = SHAPES[cell]
+    B, S = sh.global_batch, sh.seq_len
+    enc_len = S // cfg.enc_len_ratio if cfg.is_encdec else 0
+    struct = M.cache_struct(cfg, B, S, enc_len)
+    bs = _batch_spec(policy, B)
+    m = policy.model_axis
+
+    def spec_for(path, s):
+        name = path[-1].key
+        if name in ("k", "v", "ck", "cv"):     # (L, B, H, S, D)
+            return P(None, *bs, None, m, None)
+        if name == "conv":                      # (L, B, K-1, E)
+            return P(None, *bs, None, m)
+        if name == "ssm":                       # (L, B, E, N)
+            return P(None, *bs, m, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=policy.named(spec_for(path, s))),
+        struct)
+
+
+def decode_token_specs(cfg: ArchConfig, cell: str, policy: Policy):
+    sh = SHAPES[cell]
+    B = sh.global_batch
+    bs = _batch_spec(policy, B)
+    return (_sds((B, 1), jnp.int32, policy, P(*bs, None)),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def param_specs(cfg: ArchConfig, policy: Policy):
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    shardings = policy.param_shardings(shapes)
+    return jax.tree_util.tree_map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        shapes, shardings)
+
+
+def opt_state_specs(cfg: ArchConfig, policy: Policy, params_sds,
+                    opt_cfg: adamw.AdamWConfig):
+    shapes = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params_sds)
+    use2d = cfg.train.use_zero1 or cfg.train.sharding == "fsdp_tp"
+
+    def shard(tree):
+        sh = policy.param_shardings(tree, use2d=use2d)
+        return jax.tree_util.tree_map(
+            lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=ns), tree, sh)
+
+    return {
+        "m": shard(shapes["m"]),
+        "v": shard(shapes["v"]),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, cell: str, policy: Policy,
+                opt_cfg: adamw.AdamWConfig | None = None) -> dict[str, Any]:
+    """Everything needed to lower the cell's step function."""
+    kind = SHAPES[cell].kind
+    out: dict[str, Any] = {"kind": kind}
+    params = param_specs(cfg, policy)
+    out["params"] = params
+    if kind == "train":
+        out["batch"] = train_batch_specs(cfg, cell, policy)
+        out["opt_state"] = opt_state_specs(
+            cfg, policy, params, opt_cfg or adamw.AdamWConfig())
+    elif kind == "prefill":
+        out["batch"] = prefill_batch_specs(cfg, cell, policy)
+    else:
+        out["caches"] = cache_specs(cfg, cell, policy)
+        tok, clen = decode_token_specs(cfg, cell, policy)
+        out["tokens"], out["cache_len"] = tok, clen
+    return out

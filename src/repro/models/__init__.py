@@ -1,0 +1,2 @@
+from . import attention, layers, mamba, model, moe, sharding, transformer  # noqa: F401
+from .sharding import Policy, make_policy  # noqa: F401

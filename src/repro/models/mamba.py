@@ -1,0 +1,184 @@
+"""Mamba-1 block (falcon-mamba, jamba mamba layers).
+
+Three scan paths:
+* ``pallas``  — the fused ``kernels/mamba_scan`` TPU kernel;
+* ``xla``     — chunked ``lax.scan`` (outer scan over time chunks, inner
+  scan over steps, chunk body ``jax.checkpoint``-ed) so training backward
+  materializes per-step ``(B,E,N)`` residuals for *one chunk at a time*
+  instead of the whole sequence — the XLA analogue of the fused kernel's
+  recompute;
+* ``step``    — O(1) single-token decode with (conv, ssm) state.
+
+Sharding: everything is elementwise in E (= d_inner), which is sharded
+over the model axis; the two projections contract over d/E and reduce via
+GSPMD as usual.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mamba_scan import selective_scan as _scan_kernel
+from . import layers as Ly
+
+F32 = jnp.float32
+
+
+def dt_rank(cfg) -> int:
+    return cfg.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_init(key, cfg):
+    d, E, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    std = Ly.INIT_STD
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=F32)[None, :], (E, 1))
+    return {
+        "in_proj": Ly.dense_init(ks[0], d, 2 * E),
+        "conv_w": jax.random.normal(ks[1], (K, E), F32) * std,
+        "conv_b": jnp.zeros((E,), F32),
+        "x_proj": Ly.dense_init(ks[2], E, R + 2 * N),
+        "dt_proj": {
+            "w": jax.random.normal(ks[3], (R, E), F32) * (R ** -0.5),
+            "b": jnp.log(jnp.expm1(jnp.full((E,), 0.01, F32))),
+        },
+        "A_log": jnp.log(A),
+        "D": jnp.ones((E,), F32),
+        "out_proj": Ly.dense_init(
+            ks[4], E, d, std=std / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via K shifted adds. x (B,S,E), w (K,E)."""
+    K = w.shape[0]
+    B, S, E = x.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=F32)
+    for k in range(K):
+        y = y + xp[:, k:k + S].astype(F32) * w[k].astype(F32)
+    return y + b.astype(F32)
+
+
+def _ssm_inputs(p, cfg, xc):
+    """xc (B,S,E) fp32 -> (delta (B,S,E), A (E,N), Bm, Cm (B,S,N))."""
+    N = cfg.ssm_state
+    R = dt_rank(cfg)
+    proj = xc.astype(jnp.bfloat16) @ p["x_proj"]["w"].astype(jnp.bfloat16)
+    proj = proj.astype(F32)
+    dt_low, Bm, Cm = proj[..., :R], proj[..., R:R + N], proj[..., R + N:]
+    delta = jax.nn.softplus(
+        dt_low @ p["dt_proj"]["w"].astype(F32) + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"].astype(F32))
+    return delta, A, Bm, Cm
+
+
+def _scan_chunked_xla(x, delta, A, Bm, Cm, D, h0, chunk: int = 128):
+    """Chunked selective scan; returns (y (B,S,E), h_final (B,E,N))."""
+    B, S, E = x.shape
+    N = A.shape[1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    def split(v):
+        return jnp.moveaxis(v.reshape(B, nc, c, -1), 1, 0)
+
+    xs = (split(x), split(delta), split(Bm), split(Cm))
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        xc, dc, bc, cc = inp                      # (B, c, *)
+
+        def step(hh, t_inp):
+            xt, dt_, bt, ct = t_inp               # (B,E),(B,E),(B,N),(B,N)
+            dA = jnp.exp(dt_[..., None] * A[None])
+            hh = dA * hh + (dt_ * xt)[..., None] * bt[:, None, :]
+            y = jnp.einsum("ben,bn->be", hh, ct)
+            return hh, y
+
+        h, ys = jax.lax.scan(
+            step, h, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dc, 1, 0),
+                      jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0)))
+        return h, jnp.moveaxis(ys, 0, 1)          # (B, c, E)
+
+    hT, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, E)
+    return y + x * D[None, None], hT
+
+
+def mamba_apply(p, cfg, x, *, impl: str = "xla", scan_chunk: int = 128,
+                return_state: bool = False, policy=None):
+    """Full-sequence mamba block.  x (B,S,d) -> (y, state | None).
+
+    With ``policy`` the channel dim E (= d_inner) is explicitly sharded
+    over the model axis (everything SSM-internal is elementwise in E).
+    Without the constraints GSPMD fails to propagate through the chunked
+    time scan and replicates in_proj/out_proj and their grads —
+    EXPERIMENTS.md §Perf iter 4."""
+    B, S, d = x.shape
+    E, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+
+    def se(v):                          # shard (..., E-like) over model
+        if policy is None or policy.mesh is None \
+                or not cfg.train.ssm_shard_opt:
+            return v
+        from jax.sharding import PartitionSpec as P
+        return policy.sc(v, P(policy.batch_axes, None, policy.model_axis))
+
+    xz = se(Ly.dense(p["in_proj"], x))                   # (B,S,2E)
+    x_in, z = xz[..., :E], xz[..., E:]
+    xc = se(jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"])))
+    delta, A, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    delta = se(delta)
+    if impl in ("pallas", "pallas_interpret") and not return_state:
+        y = _scan_kernel(xc.astype(F32), delta, A, Bm, Cm, p["D"],
+                         impl=impl)
+        hT = None
+    else:
+        h0 = jnp.zeros((B, E, N), F32)
+        if policy is not None and policy.mesh is not None \
+                and cfg.train.ssm_shard_opt:
+            from jax.sharding import PartitionSpec as P
+            h0 = policy.sc(h0, P(policy.batch_axes, policy.model_axis,
+                                 None))
+        y, hT = _scan_chunked_xla(xc.astype(F32), delta, A, Bm, Cm,
+                                  p["D"].astype(F32), h0, scan_chunk)
+    y = se(y) * jax.nn.silu(z.astype(F32))
+    out = Ly.dense(p["out_proj"], y.astype(x.dtype))
+    if return_state:
+        if S >= K - 1:
+            conv_state = x_in.astype(F32)[:, S - (K - 1):]
+        else:
+            conv_state = jnp.pad(x_in.astype(F32),
+                                 ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv_state, "ssm": hT}
+    return out, None
+
+
+def mamba_step(p, cfg, x, state):
+    """Single-token decode.  x (B,1,d); state {"conv" (B,K-1,E) fp32,
+    "ssm" (B,E,N) fp32} -> (y (B,1,d), new state)."""
+    B = x.shape[0]
+    E, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = Ly.dense(p["in_proj"], x)                       # (B,1,2E)
+    x_in, z = xz[..., :E], xz[..., E:]
+    window = jnp.concatenate(
+        [state["conv"], x_in.astype(F32)], axis=1)       # (B,K,E)
+    xc = jnp.einsum("bke,ke->be", window, p["conv_w"].astype(F32)) \
+        + p["conv_b"].astype(F32)
+    xc = jax.nn.silu(xc)[:, None, :]                     # (B,1,E)
+    delta, A, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    dA = jnp.exp(delta[:, 0, :, None] * A[None])         # (B,E,N)
+    h = dA * state["ssm"] + (delta[:, 0] * xc[:, 0])[..., None] \
+        * Bm[:, 0][:, None, :]
+    y = jnp.einsum("ben,bn->be", h, Cm[:, 0]) \
+        + xc[:, 0] * p["D"].astype(F32)[None]
+    y = (y * jax.nn.silu(z[:, 0].astype(F32)))[:, None, :]
+    out = Ly.dense(p["out_proj"], y.astype(x.dtype))
+    new_state = {"conv": window[:, 1:], "ssm": h}
+    return out, new_state

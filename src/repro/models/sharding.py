@@ -1,0 +1,166 @@
+"""Sharding policy: parameter/activation PartitionSpecs by tree path.
+
+One rule table covers all architectures; specs are derived from leaf names
+(``wq``, ``e_gate``, ``in_proj``...) and left-padded with ``None`` for
+stacked-layer leading axes, so the same rules apply to scanned stacks and
+jamba period stacks.
+
+Flavors:
+* ``tp``      — 1D tensor parallelism over ``model``; params replicated
+  over data (classic Megatron).
+* ``fsdp_tp`` — 2D: the non-model matrix dim is additionally sharded over
+  ``data`` (FSDP-style per-layer all-gather, and what serving uses to fit
+  big weights).
+Optimizer state always uses the 2D layout (ZeRO-1) when
+``TrainSettings.use_zero1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    mesh: Mesh | None = None
+    flavor: str = "tp"                  # tp | fsdp_tp
+    model_axis: str = "model"
+    batch_axes: tuple[str, ...] = ("data",)
+
+    # ---------------------------------------------------------------- utils
+    def sc(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def shard_activations(self, x):
+        """(B, S, d) batch-sharded."""
+        return self.sc(x, P(self.batch_axes, None, None))
+
+    def shard_heads(self, q):
+        """(B, H, S, D): heads over model."""
+        return self.sc(q, P(self.batch_axes, self.model_axis, None, None))
+
+    def shard_kv(self, k):
+        return k  # few KV heads: let GSPMD propagate (avoid forced padding)
+
+    def shard_gqa_grouped(self, qg, k, v):
+        """Grouped GQA layout (perf iteration 1, EXPERIMENTS.md §Perf).
+
+        qg (B, Hkv, G, S, D); k/v (B, Hkv, S, D).  When Hkv < |model|,
+        unconstrained KV makes GSPMD 'involuntarily rematerialize' the
+        f32 score tiles (full all-gathers per attention tile per layer).
+        Fix: shard the GROUP axis of q over model and replicate KV —
+        scores become fully local; the only added traffic is the small
+        KV broadcast."""
+        if self.mesh is None:
+            return qg, k, v
+        m = self.model_axis
+        world_m = self.mesh.shape[m]
+        hkv, g = qg.shape[1], qg.shape[2]
+        b = self.batch_axes
+        if hkv % world_m == 0:
+            # enough KV heads: classic head sharding everywhere
+            qg = self.sc(qg, P(b, m, None, None, None))
+            k = self.sc(k, P(b, m, None, None))
+            v = self.sc(v, P(b, m, None, None))
+        elif g % world_m == 0:
+            qg = self.sc(qg, P(b, None, m, None, None))
+            k = self.sc(k, P(b, None, None, None))       # replicated
+            v = self.sc(v, P(b, None, None, None))
+        elif (hkv * g) % world_m == 0:
+            # split model over (kv, group) jointly via reshape-free 2-axis
+            # constraint is inexpressible; fall back to group sharding of
+            # the combined axis by constraining q's flat head layout
+            qg = self.sc(qg, P(b, None, m, None, None))
+            k = self.sc(k, P(b, None, None, None))
+            v = self.sc(v, P(b, None, None, None))
+        return qg, k, v
+
+    def named(self, spec: P) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------- parameter rules
+    def _dd(self, use2d: bool):
+        return "data" if use2d else None
+
+    def base_spec(self, names: tuple[str, ...], ndim_hint: int,
+                  use2d: bool) -> tuple:
+        m = self.model_axis
+        dd = self._dd(use2d)
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        if name == "embed":
+            return (m, dd)
+        if name == "scale":
+            return ()
+        if parent == "lm_head" and name == "w":
+            return (dd, m)
+        if name == "b":
+            if parent in ("wq", "wk", "wv", "in_proj", "dt_proj"):
+                return (m,)
+            return (None,)
+        if parent in ("wq", "wk", "wv", "w_gate", "w_up", "w_in",
+                      "in_proj") and name == "w":
+            return (dd, m)
+        if parent in ("wo", "w_down", "w_out", "out_proj") and name == "w":
+            return (m, dd)
+        if parent == "x_proj" and name == "w":
+            return (m, None)
+        if parent == "dt_proj" and name == "w":
+            return (None, m)
+        if name == "router":
+            return (None, None)
+        if name in ("e_gate", "e_up"):
+            return (m, dd, None)
+        if name == "e_down":
+            return (m, None, dd)
+        if name == "conv_w":
+            return (None, m)
+        if name in ("conv_b", "D"):
+            return (m,)
+        if name == "A_log":
+            return (m, None)
+        return tuple([None] * ndim_hint)
+
+    def param_specs(self, params_shape: Any, *, for_opt: bool = False,
+                    use2d: bool | None = None):
+        """Pytree of PartitionSpecs matching a params(-shaped) pytree."""
+        if use2d is None:
+            use2d = (self.flavor == "fsdp_tp") or for_opt
+
+        def one(path, leaf):
+            names = tuple(
+                p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey))
+            ndim = len(leaf.shape)
+            base = self.base_spec(names, ndim, use2d)
+            pad = ndim - len(base)
+            if pad < 0:          # scalar leaves (e.g. step counters)
+                return P()
+            return P(*([None] * pad + list(base)))
+
+        return jax.tree_util.tree_map_with_path(one, params_shape)
+
+    def param_shardings(self, params_shape: Any, **kw):
+        specs = self.param_specs(params_shape, **kw)
+        return jax.tree_util.tree_map(self.named, specs,
+                                      is_leaf=lambda s: isinstance(s, P))
+
+
+def make_policy(mesh: Mesh | None, flavor: str = "tp") -> Policy:
+    if mesh is None:
+        return Policy(mesh=None, flavor=flavor)
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else names[-1]
+    if not batch_axes:
+        batch_axes = tuple(a for a in names if a != model_axis)[:1]
+    return Policy(mesh=mesh, flavor=flavor, model_axis=model_axis,
+                  batch_axes=batch_axes)

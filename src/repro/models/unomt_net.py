@@ -1,0 +1,73 @@
+"""UNOMT drug-response regression network (paper §4.2, Figures 6–7).
+
+Dense input layer -> stacked residual "response blocks" (two dense layers
++ dropout + ReLU with skip) -> dense tail -> single regression output.
+Block/tail counts are hyper-parameters, as in the paper's config file.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class UnomtNetConfig:
+    n_features: int = 17
+    d_hidden: int = 1024
+    n_res_blocks: int = 3
+    n_dense_tail: int = 2
+    dropout: float = 0.1
+
+
+def init(key, cfg: UnomtNetConfig):
+    ks = jax.random.split(key, 3 + 2 * cfg.n_res_blocks + cfg.n_dense_tail)
+    def lin(k, i, o):
+        return {"w": jax.random.normal(k, (i, o), F32)
+                * (2.0 / i) ** 0.5, "b": jnp.zeros((o,), F32)}
+    p = {"input": lin(ks[0], cfg.n_features, cfg.d_hidden), "blocks": [],
+         "tail": [], "out": lin(ks[1], cfg.d_hidden, 1)}
+    for b in range(cfg.n_res_blocks):
+        p["blocks"].append({
+            "fc1": lin(ks[2 + 2 * b], cfg.d_hidden, cfg.d_hidden),
+            "fc2": lin(ks[3 + 2 * b], cfg.d_hidden, cfg.d_hidden),
+        })
+    off = 2 + 2 * cfg.n_res_blocks
+    for t in range(cfg.n_dense_tail):
+        p["tail"].append(lin(ks[off + t], cfg.d_hidden, cfg.d_hidden))
+    return p
+
+
+def _lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def apply(p, cfg: UnomtNetConfig, x, *, train: bool = False, key=None):
+    h = jax.nn.relu(_lin(p["input"], x))
+    for blk in p["blocks"]:
+        r = jax.nn.relu(_lin(blk["fc1"], h))
+        r = _lin(blk["fc2"], r)
+        if train and key is not None and cfg.dropout > 0:
+            key, sub = jax.random.split(key)
+            keep = jax.random.bernoulli(sub, 1 - cfg.dropout, r.shape)
+            r = jnp.where(keep, r / (1 - cfg.dropout), 0.0)
+        h = jax.nn.relu(h + r)               # response block + skip
+    for t in p["tail"]:
+        h = jax.nn.relu(_lin(t, h))
+    return _lin(p["out"], h)[:, 0]
+
+
+def mse_loss(p, cfg: UnomtNetConfig, batch, *, train: bool = False,
+             key=None):
+    pred = apply(p, cfg, batch["x"], train=train, key=key)
+    mask = batch.get("mask")
+    err = (pred - batch["y"]) ** 2
+    if mask is not None:
+        m = mask.astype(F32)
+        loss = jnp.sum(err * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(err)
+    return loss, {"mse": loss}

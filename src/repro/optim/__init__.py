@@ -1,0 +1,3 @@
+from . import adamw  # noqa: F401
+from . import compression  # noqa: F401
+from .adamw import AdamWConfig  # noqa: F401

@@ -1,0 +1,65 @@
+"""Horovod-style gradient compression with error feedback (paper §3.3.1).
+
+``compressed_grad_allreduce`` runs inside shard_map over the data axes:
+int8 wire format via reduce-scatter (all_to_all) + all-gather, ~4x fewer
+bytes than fp32 ring allreduce.  The local quantization error is carried
+in a residual pytree and re-injected next step (EF-SGD, Karimireddy et
+al. 2019) so compression stays unbiased in the long run.  (The second-
+stage re-quantization error after the local sum is not attributable to a
+single worker and is left uncorrected — standard practice.)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_residuals(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def _quant_chunks(parts):
+    """parts (world, chunk) -> (int8, scales (world,1))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(parts), axis=1, keepdims=True)
+                        / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(parts / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _compressed_mean_leaf(g, e, axes, world: int):
+    """Returns (mean-of-gradients approx, new residual)."""
+    shape = g.shape
+    h = g.astype(F32) + e
+    flat = h.reshape(-1)
+    n = flat.shape[0]
+    chunk = -(-n // world)
+    padded = jnp.pad(flat, (0, world * chunk - n)).reshape(world, chunk)
+    q, scale = _quant_chunks(padded)
+    local_deq = q.astype(F32) * scale
+    resid = (padded - local_deq).reshape(-1)[:n].reshape(shape)
+
+    a2a = partial(jax.lax.all_to_all, axis_name=axes, split_axis=0,
+                  concat_axis=0, tiled=True)
+    mine = jnp.sum(a2a(q).astype(F32) * a2a(scale), axis=0)   # (chunk,)
+    q2, s2 = _quant_chunks(mine[None])
+    gq = jax.lax.all_gather(q2[0], axes, tiled=True)
+    gs = jax.lax.all_gather(s2[0], axes)
+    out = (gq.reshape(world, chunk).astype(F32)
+           * gs.reshape(world, 1)).reshape(-1)[:n]
+    return (out.reshape(shape) / world).astype(g.dtype), resid
+
+
+def compressed_grad_allreduce(grads, residuals, axes, world: int):
+    """Pytree version; returns (mean grads, new residuals)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(residuals)
+    outs = [_compressed_mean_leaf(g, e, axes, world)
+            for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e

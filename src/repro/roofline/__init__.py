@@ -1,0 +1,2 @@
+from .analysis import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze  # noqa: F401
+from .hlo import parse_collectives  # noqa: F401

@@ -1,0 +1,146 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Constants (assignment): TPU v5e-like — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds/step, per chip — cost_analysis of the post-SPMD module is
+the per-partition program, so its FLOPs/bytes are already per-device;
+dividing by per-chip peaks is equivalent to the assignment's
+``HLO_FLOPs/(chips × peak)`` with global HLO_FLOPs):
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = ring-model link bytes per device / ICI_BW
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from .hlo import CollectiveStats, parse_collectives
+from .hlo_cost import analyze_hlo_text
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective: CollectiveStats
+    model_flops: float                   # 6ND (train) / 2ND (inference)
+    n_chips: int
+    memory_per_dev: dict | None = None
+    xla_flops: float = 0.0               # HloCostAnalysis (while body x1 —
+    xla_bytes: float = 0.0               # kept for reference only)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective.total_link_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        hlo_global = self.flops_per_dev * self.n_chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_s * PEAK_FLOPS * self.n_chips
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "collective_result_bytes": self.collective.result_bytes,
+            "collective_link_bytes": self.collective.link_bytes,
+            "collective_counts": self.collective.counts,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_s,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu": self.mfu,
+            "memory_per_dev": self.memory_per_dev,
+            "xla_flops": self.xla_flops,
+            "xla_bytes": self.xla_bytes,
+        }
+
+
+def model_flops_for(cfg, cell_name: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference steps."""
+    from ..configs import SHAPES
+    sh = SHAPES[cell_name]
+    n = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n * tokens
+    tokens = sh.global_batch            # one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(compiled, *, arch: str, cell: str, mesh_desc: str,
+            n_chips: int, cfg) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older API returned [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    # trip-count-aware costs (XLA counts while bodies once; a scanned
+    # 80-layer stack would be ~80x undercounted) — see hlo_cost.py
+    hc = analyze_hlo_text(compiled.as_text())
+    flops = float(hc.flops)
+    byts = float(hc.bytes)
+    stats = hc.collective_stats()
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(ma, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+    except Exception:
+        pass
+    return Roofline(arch=arch, cell=cell, mesh=mesh_desc,
+                    flops_per_dev=flops, bytes_per_dev=byts,
+                    collective=stats,
+                    model_flops=model_flops_for(cfg, cell),
+                    n_chips=n_chips, memory_per_dev=mem,
+                    xla_flops=xla_flops, xla_bytes=xla_bytes)

@@ -1,0 +1,105 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` has FLOPs/bytes but no collective bytes — we
+regex the per-partition HLO module for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, take the *result*
+shape bytes (per-device), recover the participant group size from
+``replica_groups`` (both explicit ``{{0,1,..}}`` and iota
+``[g,n]<=[...]`` formats), and convert to per-device link bytes with the
+standard ring cost factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+_LINE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict          # per-device result bytes by op kind
+    link_bytes: dict            # ring-model per-device link bytes by kind
+
+    @property
+    def total_link_bytes(self) -> float:
+        return float(sum(self.link_bytes.values()))
+
+    @property
+    def total_result_bytes(self) -> float:
+        return float(sum(self.result_bytes.values()))
+
+
+def _ring_factor(op: str, group: int) -> float:
+    if op == "collective-permute":
+        return 1.0              # one hop of the full result, no groups attr
+    if group <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if op == "all-gather":
+        return float(group - 1) / group
+    if op == "reduce-scatter":
+        # result is the scattered shard; bytes moved ~ (group-1) * result
+        return float(group - 1)
+    if op == "all-to-all":
+        return float(group - 1) / group
+    return 1.0                  # collective-permute: one hop
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    result_bytes: dict = defaultdict(float)
+    link_bytes: dict = defaultdict(float)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        # async pairs: count -start, skip -done (same traffic)
+        if f"{op}-done(" in line:
+            continue
+        if m.group(1) is not None:          # tuple result
+            b = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        else:
+            b = _shape_bytes(m.group(2), m.group(3))
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _IOTA_RE.search(line)
+            if mi:
+                g = int(mi.group(2))
+        counts[op] += 1
+        result_bytes[op] += b
+        link_bytes[op] += b * _ring_factor(op, g)
+    return CollectiveStats(dict(counts), dict(result_bytes),
+                           dict(link_bytes))

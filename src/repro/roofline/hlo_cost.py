@@ -1,0 +1,441 @@
+"""Trip-count-aware cost model over post-optimization HLO text.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) counts a ``while`` body
+**once**, so any scanned program (scan-over-layers, microbatch accumulation,
+chunked attention/loss) under-reports FLOPs/bytes/collective traffic by the
+trip count — for a 94-layer scanned stack that is a ~94x error in every
+roofline term.  This module re-derives the three costs from
+``compiled.as_text()`` with ``while`` bodies multiplied by their
+``known_trip_count`` backend config (falling back to the loop-condition
+constant), which XLA attaches to all ``lax.scan``/``fori_loop`` lowerings.
+
+Accounting conventions (mirrors HloCostAnalysis at fusion granularity):
+* dot: ``2 * prod(output_dims) * prod(contracted_dims)`` FLOPs;
+* other non-trivial ops: 1 FLOP per output element;
+* bytes: per top-level kernel (fusion or unfused op) = operand bytes +
+  output bytes; fusion-internal ops contribute FLOPs but no bytes;
+* collectives: result-shape bytes with ring-model link factors
+  (see ``hlo.py``), multiplied by the enclosing loops' trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from .hlo import _DTYPE_BYTES, CollectiveStats, _ring_factor
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\s{}]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count=\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops with no arithmetic/traffic of their own
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "bitcast-convert", "reshape", "after-all", "partition-id",
+         "replica-id", "iota", "custom-call"}
+
+# ops that touch only their *output*-sized window of the operand (XLA's
+# HloCostAnalysis convention): billing the full operand would overcount a
+# scan body's dynamic-slice of stacked layer weights by n_layers x.
+_SLICING = {"dynamic-slice", "gather", "slice"}
+_UPDATING = {"dynamic-update-slice", "scatter"}
+
+
+def _parse_shapes(type_str: str):
+    """'(s32[], bf16[2,3]{1,0})' or 'f32[4,4]{1,0}' -> [(dtype, dims)]."""
+    return [(dt, tuple(int(d) for d in dims.split(",") if d))
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _shape_bytes(shapes) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * _prod(dims) for dt, dims in shapes)
+
+
+def _elems(shapes) -> int:
+    return sum(_prod(dims) for dims, in [(d,) for _, d in shapes])
+
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    out_shapes: list            # [(dtype, dims)]
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    params: dict                # name -> [(dtype, dims)]
+    ops: list                   # [_Op]
+    symbols: dict               # name -> [(dtype, dims)]
+    defs: dict = dataclasses.field(default_factory=dict)  # name -> _Op
+
+
+def parse_module(hlo_text: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and ("->" in line):
+                name, params_str, _ret = m.groups()
+                params = {}
+                for pm in re.finditer(r"%?([\w\.\-]+):\s*"
+                                      r"((?:\([^)]*\)|[\w\[\],{}]+))",
+                                      params_str):
+                    params[pm.group(1)] = _parse_shapes(pm.group(2))
+                cur = _Comp(name=name, params=params, ops=[],
+                            symbols=dict(params))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        opname, type_str, opcode, _rest = m.groups()
+        shapes = _parse_shapes(type_str)
+        op = _Op(name=opname, opcode=opcode, out_shapes=shapes, line=line)
+        cur.ops.append(op)
+        cur.symbols[opname] = shapes
+        cur.defs[opname] = op
+    return comps
+
+
+def _is_pure_convert_body(body: "_Comp") -> bool:
+    real = [o for o in body.ops if o.opcode != "parameter"]
+    return len(real) == 1 and real[0].opcode == "convert"
+
+
+def _wire_factor(op: _Op, comp: _Comp, comps: dict) -> float:
+    """Target wire-bytes correction for a collective.
+
+    The XLA *CPU* backend's float normalization legalizes bf16
+    collectives to f32, wrapping the operand in a pure bf16->f32 convert
+    (``wrapped_convert`` fusion or a bare convert).  On the TPU target
+    the wire stays bf16 — bill half the bytes when the pattern is
+    detected.  (Verified: a bf16 ``psum`` compiles on CPU to exactly
+    convert -> f32 all-reduce -> convert.)"""
+    names = _operands(op)
+    if not names:
+        return 1.0
+    d = comp.defs.get(names[0])
+    if d is None:
+        return 1.0
+    if d.opcode == "convert":
+        src = _operands(d)
+        if src and comp.symbols.get(src[0], [("", ())])[0][0] == "bf16":
+            return 0.5
+        return 1.0
+    if d.opcode == "fusion":
+        m = _CALLS_RE.search(d.line)
+        body = comps.get(m.group(1)) if m else None
+        if body is not None and _is_pure_convert_body(body):
+            ptypes = [s[0][0] for s in body.params.values() if s]
+            if ptypes and all(t == "bf16" for t in ptypes):
+                return 0.5
+    return 1.0
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    out_elems = _prod(op.out_shapes[0][1]) if op.out_shapes else 0
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    # first operand after '(' is the lhs
+    paren = op.line.split(op.opcode + "(", 1)[1]
+    ops_m = _OPERAND_RE.findall(paren)
+    contracted = 1
+    if mc and ops_m:
+        lhs = comp.symbols.get(ops_m[0])
+        if lhs:
+            dims = lhs[0][1]
+            for idx in (int(i) for i in mc.group(1).split(",") if i):
+                if idx < len(dims):
+                    contracted *= dims[idx]
+    return 2.0 * out_elems * contracted
+
+
+def _operands(op: _Op) -> list:
+    paren = op.line.split(op.opcode + "(", 1)[1]
+    out, seen = [], set()
+    for name in _OPERAND_RE.findall(paren.split("), ")[0] + ")"):
+        if name not in seen:
+            seen.add(name)
+            out.append(name)
+    return out
+
+
+def _operand_bytes(op: _Op, comp: _Comp) -> int:
+    total = 0
+    for name in _operands(op):
+        shapes = comp.symbols.get(name)
+        if shapes:
+            total += _shape_bytes(shapes)
+    return total
+
+
+def _kernel_bytes(op: _Op, comp: _Comp) -> int:
+    """HBM traffic of one top-level kernel, with slicing ops billed at
+    their accessed window, not the full operand buffer."""
+    out_b = _shape_bytes(op.out_shapes)
+    if op.opcode in _SLICING:
+        return 2 * out_b                       # read window + write out
+    if op.opcode in _UPDATING:
+        names = _operands(op)
+        upd = names[1] if len(names) > 1 else None
+        upd_b = _shape_bytes(comp.symbols.get(upd, [])) if upd else out_b
+        return 2 * upd_b                       # read + write the window
+    return _operand_bytes(op, comp) + out_b
+
+
+# dtype/layout pass-through ops: a window access seen through these is
+# still a window access (the TPU target keeps dus in place; the CPU
+# backend's convert-around-dus quirk must not bill the full buffer)
+_PASSTHRU = {"convert", "bitcast", "copy", "bitcast-convert"}
+
+
+def _transitive_consumers(body: "_Comp", name: str, depth: int = 0):
+    """Consumers of `name` inside the fusion body, looking through
+    dtype/layout pass-through ops.  Yields (_Op, via_operand_index)."""
+    if depth > 6:
+        return
+    for bop in body.ops:
+        if bop.opcode == "parameter":
+            continue
+        ops_list = _operands(bop)
+        if name not in ops_list:
+            continue
+        if bop.opcode in _PASSTHRU:
+            yield from _transitive_consumers(body, bop.name, depth + 1)
+            # a pass-through that IS the fusion root still forwards the
+            # buffer; treated as window-neutral
+        else:
+            yield bop, ops_list.index(name)
+
+
+def _fusion_bytes(op: _Op, comp: _Comp, body: "_Comp") -> int:
+    """Fusion traffic = output + per-parameter accessed bytes.  A param
+    consumed ONLY by slicing/updating ops (possibly through converts) is
+    billed at the accessed windows — the stacked-layer-weights /
+    residual-stash patterns of scans."""
+    out_b = _shape_bytes(op.out_shapes)
+    operand_names = _operands(op)
+    param_names = list(body.params.keys())
+    dus_root = any(b.opcode in _UPDATING for b in body.ops)
+    total = out_b
+    for i, pname in enumerate(param_names):
+        full = _shape_bytes(body.params[pname])
+        if i < len(operand_names):
+            oshapes = comp.symbols.get(operand_names[i])
+            if oshapes:
+                full = _shape_bytes(oshapes)
+        accessed, only_windows, used = 0, True, False
+        for bop, op_idx in _transitive_consumers(body, pname):
+            used = True
+            if bop.opcode in _SLICING and op_idx == 0:
+                accessed += _shape_bytes(bop.out_shapes)
+            elif bop.opcode in _UPDATING and op_idx == 0:
+                names = _operands(bop)
+                upd = names[1] if len(names) > 1 else None
+                accessed += _shape_bytes(
+                    body.symbols.get(upd, bop.out_shapes))
+            else:
+                only_windows = False
+        if used and only_windows and accessed:
+            total += min(accessed, full)
+        elif used:
+            total += full
+        # unused params (pure pass-through to the root, e.g. aliased dus
+        # carry whose every use was a window): bill the window pattern
+        elif dus_root and full == out_b:
+            continue
+        else:
+            total += full
+    if dus_root and total == out_b:
+        # pure in-place update fusion: output aliases the carry; traffic
+        # is the window write, already included via accessed above
+        pass
+    if dus_root:
+        # output buffer aliases the updated operand: don't bill the full
+        # output write, only the updated windows (already in `accessed`)
+        win = sum(_shape_bytes(body.symbols.get(
+            _operands(b)[1] if len(_operands(b)) > 1 else b.name,
+            b.out_shapes))
+            for b in body.ops if b.opcode in _UPDATING)
+        total = total - out_b + min(2 * win, out_b)
+    return total
+
+
+def _group_size(line: str) -> int:
+    mg = _GROUPS_RE.search(line)
+    if mg:
+        return len(mg.group(1).split(","))
+    mi = _IOTA_RE.search(line)
+    if mi:
+        return int(mi.group(2))
+    return 1
+
+
+def _trip_count(op: _Op, comps: dict) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    mc = _COND_RE.search(op.line)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for o in comps[mc.group(1)].ops:
+            if o.opcode in ("compare", "constant"):
+                consts += [int(c) for c in _CONST_CMP_RE.findall(o.line)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_result_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_link_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in other.coll_counts:
+            self.coll_counts[k] += other.coll_counts[k] * mult
+            self.coll_result_bytes[k] += other.coll_result_bytes[k] * mult
+            self.coll_link_bytes[k] += other.coll_link_bytes[k] * mult
+
+    def collective_stats(self) -> CollectiveStats:
+        return CollectiveStats(
+            counts={k: int(v) for k, v in self.coll_counts.items()},
+            result_bytes=dict(self.coll_result_bytes),
+            link_bytes=dict(self.coll_link_bytes))
+
+
+def _comp_cost(comp: _Comp, comps: dict, memo: dict,
+               in_fusion: bool = False) -> HloCost:
+    key = (comp.name, in_fusion)
+    if key in memo:
+        return memo[key]
+    cost = HloCost()
+    for op in comp.ops:
+        oc = op.opcode
+        base = oc[:-6] if oc.endswith("-start") else oc
+        if oc.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            b = _shape_bytes(op.out_shapes)
+            if oc.endswith("-start") and len(op.out_shapes) > 1:
+                # start returns (operand alias, result): count result half
+                b = b / 2
+            b *= _wire_factor(op, comp, comps)    # bf16-on-target fix
+            g = _group_size(op.line)
+            cost.coll_counts[base] += 1
+            cost.coll_result_bytes[base] += b
+            cost.coll_link_bytes[base] += b * _ring_factor(base, g)
+            cost.bytes += _shape_bytes(op.out_shapes)
+            continue
+        if oc == "fusion":
+            m = _CALLS_RE.search(op.line)
+            body_comp = comps.get(m.group(1)) if m else None
+            if body_comp is not None:
+                body = _comp_cost(body_comp, comps, memo, in_fusion=True)
+                cost.flops += body.flops
+            if not in_fusion:
+                if body_comp is not None:
+                    cost.bytes += _fusion_bytes(op, comp, body_comp)
+                else:
+                    cost.bytes += _operand_bytes(op, comp) + \
+                        _shape_bytes(op.out_shapes)
+            continue
+        if oc == "while":
+            mb, mc = _BODY_RE.search(op.line), _COND_RE.search(op.line)
+            trip = _trip_count(op, comps)
+            if mb and mb.group(1) in comps:
+                cost.add(_comp_cost(comps[mb.group(1)], comps, memo), trip)
+            if mc and mc.group(1) in comps:
+                cost.add(_comp_cost(comps[mc.group(1)], comps, memo), trip)
+            continue
+        if oc in ("call", "map", "reduce", "reduce-window", "sort",
+                  "scatter", "select-and-scatter", "conditional"):
+            m = _TOAPPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+            if m and m.group(1) in comps:
+                sub = _comp_cost(comps[m.group(1)], comps, memo,
+                                 in_fusion=True)
+                # applied per output element for reduce/map/sort-ish ops
+                mult = _elems(op.out_shapes) if oc != "call" else 1
+                cost.flops += sub.flops * max(mult, 1)
+            if not in_fusion:
+                cost.bytes += _kernel_bytes(op, comp)
+            continue
+        if oc == "dot":
+            cost.flops += _dot_flops(op, comp)
+            if not in_fusion:
+                cost.bytes += _kernel_bytes(op, comp)
+            continue
+        if oc == "convolution":
+            # rare here; approximate as dot over kernel volume
+            out_elems = _elems(op.out_shapes)
+            cost.flops += 2.0 * out_elems
+            if not in_fusion:
+                cost.bytes += _kernel_bytes(op, comp)
+            continue
+        if oc in _FREE:
+            if oc == "custom-call" and not in_fusion:
+                cost.bytes += _kernel_bytes(op, comp)
+            continue
+        # generic elementwise / data movement
+        cost.flops += _elems(op.out_shapes)
+        if not in_fusion:
+            cost.bytes += _kernel_bytes(op, comp)
+    memo[key] = cost
+    return cost
+
+
+def analyze_hlo_text(hlo_text: str, entry: str | None = None) -> HloCost:
+    """Trip-count-aware (flops, bytes, collectives) for an HLO module."""
+    comps = parse_module(hlo_text)
+    if not comps:
+        return HloCost()
+    if entry is None:
+        # ENTRY computation: the one named like main, else largest
+        entry_comp = None
+        for name in comps:
+            if name.startswith("main"):
+                entry_comp = name
+                break
+        if entry_comp is None:
+            entry_comp = max(comps, key=lambda n: len(comps[n].ops))
+    else:
+        entry_comp = entry
+    # exclude computations reachable only as fusion bodies from double count
+    memo: dict = {}
+    return _comp_cost(comps[entry_comp], comps, memo)

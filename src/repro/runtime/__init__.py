@@ -1,0 +1,4 @@
+from .ddp import make_ddp_train_step  # noqa: F401
+from .trainer import (  # noqa: F401
+    FailureInjector, StepTimeMonitor, Trainer, run_with_restarts,
+)

@@ -1,0 +1,92 @@
+"""Optimizer + compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.optim.compression import _quant_chunks, init_residuals
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    target = jnp.asarray([1.0, 2.0])
+    state = adamw.init(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw.update(params, g, state, cfg)
+
+    for _ in range(150):
+        params, state, _ = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lr0 = float(adamw.schedule(cfg, jnp.int32(0)))
+    lr5 = float(adamw.schedule(cfg, jnp.int32(5)))
+    lr10 = float(adamw.schedule(cfg, jnp.int32(10)))
+    lr100 = float(adamw.schedule(cfg, jnp.int32(100)))
+    assert lr0 == 0.0
+    assert abs(lr5 - 0.5) < 1e-6
+    assert abs(lr10 - 1.0) < 1e-6
+    assert abs(lr100 - 0.1) < 1e-3      # decays to min_lr_ratio * lr
+
+
+def test_grad_clipping_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                            warmup_steps=0, min_lr_ratio=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw.update(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5   # pre-clip norm is reported
+
+
+def test_decay_mask_skips_norm_scales():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                            min_lr_ratio=1.0)
+    params = {"dense": {"w": jnp.ones((2,))},
+              "norm": {"scale": jnp.ones((2,))}}
+    state = adamw.init(params, cfg)
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    p2, _, _ = adamw.update(params, zero_g, state, cfg)
+    # w decays toward 0; scale does not
+    assert float(p2["dense"]["w"][0]) < 1.0
+    np.testing.assert_allclose(np.asarray(p2["norm"]["scale"]), 1.0)
+
+
+def test_moment_dtype_respected():
+    cfg = adamw.AdamWConfig(moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((2,), jnp.float32)}
+    state = adamw.init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((2,))}
+    _, s2, _ = adamw.update(params, g, state, cfg)
+    assert s2["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_quantization_error_bounded():
+    rng = np.random.default_rng(0)
+    parts = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    q, scale = _quant_chunks(parts)
+    deq = np.asarray(q, np.float32) * np.asarray(scale)
+    err = np.abs(deq - np.asarray(parts))
+    # max error is half a quantization bin per chunk
+    bins = np.asarray(scale)
+    assert (err <= bins / 2 + 1e-7).all()
+    assert q.dtype == jnp.int8
+
+
+def test_init_residuals_zero():
+    params = {"a": jnp.ones((3,)), "b": {"c": jnp.ones((2, 2))}}
+    res = init_residuals(params)
+    for leaf in jax.tree_util.tree_leaves(res):
+        assert float(jnp.sum(jnp.abs(leaf))) == 0.0
+        assert leaf.dtype == jnp.float32

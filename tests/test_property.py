@@ -1,0 +1,135 @@
+"""Hypothesis property-based tests on the table engine's invariants.
+
+Strategy: small random tables (int key column + float value column, random
+capacity padding).  Each property is an algebraic law of the relational
+operators — the kind of invariant the HPTMT composition model relies on.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import local_ops as L
+from repro.core.partition import hash_columns, partition_ids
+from repro.core.table import Table
+
+from conftest import as_sets
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def tables(draw, max_rows=24, key_range=8):
+    n = draw(st.integers(0, max_rows))
+    pad = draw(st.integers(0, 8))
+    keys = draw(st.lists(st.integers(0, key_range - 1),
+                         min_size=n, max_size=n))
+    vals = draw(st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    return Table.from_dict(
+        {"k": np.asarray(keys, np.int32),
+         "v": np.asarray(vals, np.float32)},
+        capacity=max(n + pad, 1))
+
+
+@given(tables())
+def test_nvalid_never_exceeds_capacity(t):
+    assert int(t.nvalid) <= t.capacity
+
+
+@given(tables())
+def test_sort_is_permutation_and_ordered(t):
+    out = L.sort_values(t, ["k"])
+    assert int(out.nvalid) == int(t.nvalid)
+    got = out.to_numpy()
+    want = t.to_numpy()
+    np.testing.assert_array_equal(np.sort(got["k"]), np.sort(want["k"]))
+    assert (np.diff(got["k"]) >= 0).all()
+    # row payloads stay attached to their keys (multiset of pairs equal)
+    assert as_sets(got) == as_sets(want)
+
+
+@given(tables())
+def test_dedup_subset_of_input_and_unique(t):
+    out = L.drop_duplicates(t, ["k"]).to_numpy()
+    keys = t.to_numpy()["k"]
+    assert set(out["k"]) == set(keys)
+    assert len(out["k"]) == len(np.unique(keys))
+
+
+@given(tables(), st.integers(0, 7))
+def test_select_conjunction_composes(t, cut):
+    m1 = t["k"] >= cut
+    m2 = t["k"] % 2 == 0
+    seq = L.select(L.select(t, m1), L.select(t, m1)["k"] % 2 == 0)
+    joint = L.select(t, m1 & m2)
+    assert as_sets(seq.to_numpy()) == as_sets(joint.to_numpy())
+
+
+@given(tables())
+def test_groupby_sum_preserves_total(t):
+    out = L.groupby_aggregate(t, ["k"], {"v": "sum"})
+    total_groups = float(L.aggregate(out, "v_sum", "sum"))
+    total_rows = float(L.aggregate(t, "v", "sum"))
+    np.testing.assert_allclose(total_groups, total_rows, rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(tables(), tables())
+def test_join_row_count_is_sum_of_key_products(a, b):
+    na = a.to_numpy()["k"]
+    nb = b.to_numpy()["k"]
+    want = sum(int((na == k).sum()) * int((nb == k).sum())
+               for k in np.unique(na))
+    out, overflow = L.join(a, b, left_on=["k"], out_capacity=1024,
+                           return_overflow=True)
+    assert int(out.nvalid) == want
+    assert int(overflow) == 0
+
+
+@given(tables(), tables())
+def test_intersect_difference_partition_left(a, b):
+    """difference(a,b) ∪ semijoin(a,b) == a (as key sets)."""
+    inter = set(L.intersect(a, b, ["k"]).to_numpy()["k"])
+    diff = set(L.difference(a, b, ["k"]).to_numpy()["k"])
+    keys = set(a.to_numpy()["k"])
+    assert inter | diff == keys
+    assert inter & diff == set()
+
+
+@given(tables())
+def test_union_with_self_is_dedup(t):
+    u = L.union(t, t).to_numpy()
+    d = L.drop_duplicates(t).to_numpy()
+    assert as_sets(u) == as_sets(d)
+
+
+@given(tables())
+def test_concat_counts_add(t):
+    out = L.concat(t, t)
+    assert int(out.nvalid) == 2 * int(t.nvalid)
+
+
+@given(tables(), st.integers(1, 8))
+def test_partition_ids_in_range_and_hash_deterministic(t, parts):
+    pid = np.asarray(partition_ids(t, ["k"], parts))
+    assert ((pid >= 0) & (pid < parts)).all()
+    h1 = np.asarray(hash_columns([t["k"]]))
+    h2 = np.asarray(hash_columns([t["k"]]))
+    np.testing.assert_array_equal(h1, h2)
+    # equal keys hash equal -> equal partition (valid rows only; padding
+    # rows are masked to pid 0 by design)
+    n = int(t.nvalid)
+    keys = np.asarray(t["k"])[:n]
+    for u in np.unique(keys):
+        assert len(np.unique(pid[:n][keys == u])) == 1
+
+
+@given(st.lists(st.floats(-1e5, 1e5, allow_nan=False, width=32),
+                min_size=1, max_size=32))
+def test_float_hash_normalizes_negative_zero(vals):
+    col = jnp.asarray(np.asarray(vals, np.float32))
+    h_pos = np.asarray(hash_columns([jnp.abs(col) * 0.0]))
+    h_neg = np.asarray(hash_columns([-(jnp.abs(col) * 0.0)]))
+    np.testing.assert_array_equal(h_pos, h_neg)

@@ -1,0 +1,103 @@
+"""Roofline machinery: HLO collective parser + three-term analysis."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     model_flops_for)
+from repro.roofline.hlo import CollectiveStats, parse_collectives
+
+
+def test_parse_allreduce_iota_groups():
+    hlo = ('%ar = f32[1024,256]{1,0} all-reduce(%x), '
+           'replica_groups=[16,32]<=[512], to_apply=%add')
+    s = parse_collectives(hlo)
+    assert s.counts["all-reduce"] == 1
+    want = 1024 * 256 * 4
+    assert s.result_bytes["all-reduce"] == want
+    # ring factor 2(g-1)/g with g=32
+    np.testing.assert_allclose(s.link_bytes["all-reduce"],
+                               want * 2 * 31 / 32)
+
+
+def test_parse_allgather_explicit_groups():
+    hlo = ('%ag = bf16[64,128]{1,0} all-gather(%x), dimensions={0}, '
+           'replica_groups={{0,1,2,3},{4,5,6,7}}')
+    s = parse_collectives(hlo)
+    want = 64 * 128 * 2
+    assert s.result_bytes["all-gather"] == want
+    np.testing.assert_allclose(s.link_bytes["all-gather"], want * 3 / 4)
+
+
+def test_parse_reduce_scatter():
+    hlo = ('%rs = f32[32,64]{1,0} reduce-scatter(%x), dimensions={0}, '
+           'replica_groups=[8,64]<=[512], to_apply=%add')
+    s = parse_collectives(hlo)
+    want = 32 * 64 * 4
+    # reduce-scatter result is the shard; link bytes ~ (g-1)*result
+    np.testing.assert_allclose(s.link_bytes["reduce-scatter"], want * 63)
+
+
+def test_parse_all_to_all_and_permute():
+    hlo = """
+%a2a = s32[16,16]{1,0} all-to-all(%x), replica_groups=[32,16]<=[512]
+%cp = f32[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+"""
+    s = parse_collectives(hlo)
+    assert s.counts["all-to-all"] == 1
+    assert s.counts["collective-permute"] == 1
+    np.testing.assert_allclose(s.link_bytes["all-to-all"],
+                               16 * 16 * 4 * 15 / 16)
+    np.testing.assert_allclose(s.link_bytes["collective-permute"],
+                               8 * 8 * 4)
+
+
+def test_parse_async_start_done_counted_once():
+    hlo = """
+%s = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-gather-start(%x), replica_groups=[2,4]<=[8]
+%d = f32[4,4]{1,0} all-gather-done(%s)
+"""
+    s = parse_collectives(hlo)
+    assert s.counts.get("all-gather", 0) == 1
+
+
+def test_parse_tuple_result():
+    hlo = ('%ar = (f32[8]{0}, bf16[16]{0}) all-reduce(%a, %b), '
+           'replica_groups=[4,8]<=[32], to_apply=%add')
+    s = parse_collectives(hlo)
+    assert s.result_bytes["all-reduce"] == 8 * 4 + 16 * 2
+
+
+def test_parse_ignores_non_collectives():
+    hlo = "%m = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}"
+    s = parse_collectives(hlo)
+    assert s.total_link_bytes == 0
+    assert s.counts == {}
+
+
+def test_roofline_terms_and_bound():
+    stats = CollectiveStats(counts={"all-reduce": 1},
+                            result_bytes={"all-reduce": 1e9},
+                            link_bytes={"all-reduce": 2e9})
+    r = Roofline(arch="x", cell="train_4k", mesh="16x16",
+                 flops_per_dev=1e12, bytes_per_dev=1e11,
+                 collective=stats, model_flops=6e15, n_chips=256)
+    np.testing.assert_allclose(r.compute_s, 1e12 / PEAK_FLOPS)
+    np.testing.assert_allclose(r.memory_s, 1e11 / HBM_BW)
+    np.testing.assert_allclose(r.collective_s, 2e9 / ICI_BW)
+    assert r.bound == "memory"
+    assert r.step_s == max(r.compute_s, r.memory_s, r.collective_s)
+    assert 0 < r.mfu < 1.0
+    d = r.to_dict()
+    assert d["bound"] == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs import get_config
+    cfg = get_config("granite-3-2b")
+    n = cfg.active_param_count()
+    train = model_flops_for(cfg, "train_4k")
+    np.testing.assert_allclose(train, 6.0 * n * 256 * 4096)
+    dec = model_flops_for(cfg, "decode_32k")
+    np.testing.assert_allclose(dec, 2.0 * n * 128)
+    pre = model_flops_for(cfg, "prefill_32k")
+    np.testing.assert_allclose(pre, 2.0 * n * 32 * 32768)

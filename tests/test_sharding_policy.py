@@ -1,0 +1,73 @@
+"""Sharding policy rules: every param leaf of every arch gets a wellformed
+PartitionSpec under both flavors."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import model as M
+from repro.models.sharding import Policy, make_policy
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("flavor", ["tp", "fsdp_tp"])
+def test_param_specs_wellformed(arch, flavor):
+    cfg = get_reduced(arch)
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    policy = Policy(mesh=None, flavor=flavor)
+    specs = policy.param_specs(shapes)
+
+    def one(path, leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        axes = [a for a in spec if a is not None]
+        # no axis used twice
+        flat = []
+        for a in axes:
+            flat.extend(a if isinstance(a, tuple) else (a,))
+        assert len(flat) == len(set(flat)), (path, spec)
+        for a in flat:
+            assert a in ("data", "model", "pod"), (path, spec)
+
+    jax.tree_util.tree_map_with_path(one, shapes, specs)
+
+
+def test_fsdp_adds_data_axis_to_big_matrices():
+    cfg = get_reduced("granite-3-2b")
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    p1 = Policy(mesh=None, flavor="tp").param_specs(shapes)
+    p2 = Policy(mesh=None, flavor="fsdp_tp").param_specs(shapes)
+    # attention wq is (layers, d, h*dh): tp -> (None, None, model);
+    # fsdp_tp -> (None, data, model)
+    wq1 = p1["layers"]["attn"]["wq"]["w"]
+    wq2 = p2["layers"]["attn"]["wq"]["w"]
+    assert wq1 == P(None, None, "model")
+    assert wq2 == P(None, "data", "model")
+
+
+def test_opt_state_always_2d():
+    cfg = get_reduced("granite-3-2b")
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    p = Policy(mesh=None, flavor="tp")
+    specs = p.param_specs(shapes, for_opt=True)
+    assert specs["layers"]["attn"]["wq"]["w"] == P(None, "data", "model")
+
+
+def test_make_policy_axis_discovery():
+    import numpy as np
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pol = make_policy(mesh)
+    assert pol.model_axis == "model"
+    assert pol.batch_axes == ("data",)
+    mesh3 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    pol3 = make_policy(mesh3)
+    assert pol3.batch_axes == ("pod", "data")
+
+
+def test_scalar_leaves_get_empty_spec():
+    p = Policy(mesh=None)
+    specs = p.param_specs({"step": jax.ShapeDtypeStruct((), "int32")})
+    assert specs["step"] == P()

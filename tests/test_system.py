@@ -1,0 +1,82 @@
+"""End-to-end system tests: the paper's single-source DE+DL program on a
+single device (the 8-way version runs in tests/dist)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import Table
+from repro.data.unomt import (drug_feature_cols, feature_label_arrays,
+                              gen_unomt_tables, rna_cols,
+                              unomt_local_pipeline)
+from repro.models import unomt_net
+from repro.optim import adamw
+
+
+def _features():
+    raw = gen_unomt_tables(n_response=1024, n_drugs=64, n_cells=32, seed=7)
+    tbls = {k: Table.from_dict(v) for k, v in raw.items()}
+    feat = unomt_local_pipeline(tbls["response"], tbls["descriptors"],
+                                tbls["fingerprints"], tbls["rna"],
+                                out_capacity=2048)
+    return feature_label_arrays(feat)
+
+
+def test_unomt_pipeline_produces_learnable_features():
+    X, y, mask = _features()
+    n = int(np.asarray(mask).sum())
+    assert n > 800                      # ~2% nulls dropped, rest joined
+    assert X.shape[1] == 1 + 8 + 8      # conc + drug feats + rna feats
+    Xv = np.asarray(X)[:n]
+    assert np.isfinite(Xv).all()
+    # every feature column carries signal (non-constant)
+    assert (Xv.std(axis=0) > 1e-3).all()
+
+
+def test_unomt_net_overfits_pipeline_output():
+    """The full paper §4 story: features from the table engine train the
+    drug-response network to a meaningfully lower loss."""
+    X, y, mask = _features()
+    cfg = unomt_net.UnomtNetConfig(n_features=X.shape[1], d_hidden=64,
+                                   n_res_blocks=2, n_dense_tail=1,
+                                   dropout=0.0)
+    params = unomt_net.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=0, min_lr_ratio=1.0,
+                                weight_decay=0.0)
+    opt = adamw.init(params, opt_cfg)
+    batch = {"x": X, "y": y, "mask": mask}
+
+    @jax.jit
+    def step(params, opt):
+        (loss, m), g = jax.value_and_grad(
+            unomt_net.mse_loss, has_aux=True)(params, cfg, batch)
+        params, opt, _ = adamw.update(params, g, opt, opt_cfg)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(80):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < 0.2 * losses[0], (losses[0], losses[-1])
+
+
+def test_table_to_tensor_handoff_is_jittable():
+    """Stage 2 -> stage 3 -> stage 4 inside ONE jit (single-source claim)."""
+    raw = gen_unomt_tables(n_response=256, n_drugs=16, n_cells=8, seed=1)
+    tbls = {k: Table.from_dict(v) for k, v in raw.items()}
+    cfg = unomt_net.UnomtNetConfig(n_features=17, d_hidden=32,
+                                   n_res_blocks=1, n_dense_tail=1,
+                                   dropout=0.0)
+    params = unomt_net.init(jax.random.PRNGKey(1), cfg)
+
+    @jax.jit
+    def one_program(params, resp, desc, fp, rna):
+        feat = unomt_local_pipeline(resp, desc, fp, rna,
+                                    out_capacity=512)
+        X, y, mask = feature_label_arrays(feat)
+        loss, _ = unomt_net.mse_loss(params, cfg,
+                                     {"x": X, "y": y, "mask": mask})
+        return loss
+
+    loss = one_program(params, tbls["response"], tbls["descriptors"],
+                       tbls["fingerprints"], tbls["rna"])
+    assert np.isfinite(float(loss))

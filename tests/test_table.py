@@ -1,0 +1,125 @@
+"""Table abstraction unit tests: constructors, invariants, pytree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.table import (FLOAT_NULL, INT_NULL, Table, isnull_values,
+                              null_like)
+
+
+def test_from_dict_roundtrip():
+    data = {"a": np.arange(5, dtype=np.int64),
+            "b": np.linspace(0, 1, 5).astype(np.float64)}
+    t = Table.from_dict(data)
+    out = t.to_numpy()
+    np.testing.assert_array_equal(out["a"], data["a"].astype(np.int32))
+    np.testing.assert_allclose(out["b"], data["b"].astype(np.float32),
+                               rtol=1e-6)
+    assert t.capacity == 5
+    assert int(t.nvalid) == 5
+
+
+def test_from_dict_with_capacity_padding():
+    t = Table.from_dict({"a": [1, 2, 3]}, capacity=8)
+    assert t.capacity == 8
+    assert int(t.nvalid) == 3
+    out = t.to_numpy()
+    assert len(out["a"]) == 3
+    mask = np.asarray(t.valid_mask)
+    assert mask.sum() == 3 and mask[:3].all() and not mask[3:].any()
+
+
+def test_from_dict_rejects_capacity_too_small():
+    with pytest.raises(ValueError):
+        Table.from_dict({"a": [1, 2, 3]}, capacity=2)
+
+
+def test_from_dict_rejects_ragged():
+    with pytest.raises(ValueError):
+        Table.from_dict({"a": [1, 2], "b": [1, 2, 3]})
+
+
+def test_from_dict_rejects_2d():
+    with pytest.raises(ValueError):
+        Table.from_dict({"a": np.zeros((2, 2))})
+
+
+def test_from_dict_rejects_strings():
+    with pytest.raises(TypeError):
+        Table.from_dict({"a": np.array(["x", "y"])})
+
+
+def test_bool_becomes_int32():
+    t = Table.from_dict({"a": np.array([True, False])})
+    assert t.columns["a"].dtype == jnp.int32
+
+
+def test_pytree_roundtrip_through_jit():
+    t = Table.from_dict({"a": [1, 2, 3], "b": [1.0, 2.0, 3.0]}, capacity=4)
+
+    @jax.jit
+    def f(tbl: Table) -> Table:
+        return tbl.map_column("a", lambda c: c * 2)
+
+    out = f(t)
+    assert isinstance(out, Table)
+    np.testing.assert_array_equal(out.to_numpy()["a"], [2, 4, 6])
+    np.testing.assert_allclose(out.to_numpy()["b"], [1.0, 2.0, 3.0])
+
+
+def test_pytree_structure_stable():
+    t = Table.from_dict({"a": [1], "b": [2]})
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert t2.names == t.names
+    np.testing.assert_array_equal(np.asarray(t2.nvalid),
+                                  np.asarray(t.nvalid))
+
+
+def test_to_tensor_zeroes_padding():
+    t = Table.from_dict({"x": [1.0, 2.0], "y": [3, 4]}, capacity=4)
+    ten = np.asarray(t.to_tensor(["x", "y"]))
+    assert ten.shape == (4, 2)
+    np.testing.assert_allclose(ten[:2], [[1, 3], [2, 4]])
+    np.testing.assert_allclose(ten[2:], 0.0)
+
+
+def test_gather_rows():
+    t = Table.from_dict({"a": [10, 20, 30]})
+    g = t.gather_rows(jnp.array([2, 0, 1]), 3)
+    np.testing.assert_array_equal(g.to_numpy()["a"], [30, 10, 20])
+
+
+def test_pad_to_grows_and_refuses_shrink():
+    t = Table.from_dict({"a": [1, 2]})
+    t2 = t.pad_to(5)
+    assert t2.capacity == 5 and int(t2.nvalid) == 2
+    with pytest.raises(ValueError):
+        t.pad_to(1)
+
+
+def test_rename_add_prefix_astype():
+    t = Table.from_dict({"a": [1], "b": [2.0]})
+    assert set(t.rename({"a": "z"}).names) == {"z", "b"}
+    assert set(t.add_prefix("p_").names) == {"p_a", "p_b"}
+    t2 = t.astype({"a": jnp.float32})
+    assert t2.columns["a"].dtype == jnp.float32
+
+
+def test_null_sentinels():
+    ints = jnp.array([1, INT_NULL, 3], jnp.int32)
+    floats = jnp.array([1.0, FLOAT_NULL, 3.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(isnull_values(ints)),
+                                  [False, True, False])
+    np.testing.assert_array_equal(np.asarray(isnull_values(floats)),
+                                  [False, True, False])
+    assert np.asarray(isnull_values(null_like(ints))).all()
+    assert np.asarray(isnull_values(null_like(floats))).all()
+
+
+def test_head():
+    from repro.core import local_ops as L
+    t = Table.from_dict({"a": [1, 2, 3, 4]})
+    h = L.head(t, 2)
+    np.testing.assert_array_equal(h.to_numpy()["a"], [1, 2])

@@ -1,0 +1,49 @@
+"""Regression: failure BEFORE the first periodic checkpoint must restart
+from a step-0 snapshot, not the (donated) init_state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+from repro.runtime.trainer import (FailureInjector, Trainer,
+                                   run_with_restarts)
+
+
+def test_restart_before_first_checkpoint_with_donation(tmp_path):
+    cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, min_lr_ratio=1.0)
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    @jax.jit
+    def _step(params, opt, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, m = adamw.update(params, g, opt, cfg)
+        return params, opt, dict(m, loss=loss)
+
+    donating = jax.jit(
+        lambda p, o, b: _step(p, o, b), donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        p, o = state
+        p, o, m = donating(p, o, batch)
+        return (p, o), m
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+
+    def batches(start):
+        while True:
+            yield {"x": X, "y": y}
+
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state0 = (params, adamw.init(params, cfg))
+    # fail at step 3, ckpt_every 100 -> no periodic ckpt exists yet; the
+    # donated state0 buffers are dead -> must restore the step-0 snapshot
+    tr = Trainer(step_fn=step_fn, ckpt_dir=str(tmp_path), ckpt_every=100,
+                 failure=FailureInjector(fail_at=3))
+    state, hist = run_with_restarts(batches, tr, state0, n_steps=6,
+                                    log_fn=lambda *_: None)
+    assert len(hist) == 6
+    assert np.isfinite(hist[-1]["loss"])
