@@ -1,7 +1,10 @@
-"""Subprocess worker: distributed join at a given parallelism.
+"""Subprocess worker: distributed join at a given parallelism + backend.
 
-Usage: XLA_FLAGS=...device_count=W python _subproc_join.py W rows_total
-Prints one JSON line: {"world": W, "seconds": s, "rows": N}.
+Usage: XLA_FLAGS=...device_count=W python _subproc_join.py W rows impl
+(``impl`` is the local join backend: sortmerge | hash).
+Prints one JSON line:
+{"world": W, "impl": impl, "seconds": s, "rows": N, "out_rows": M,
+ "dropped": d}.
 """
 import json
 import sys
@@ -13,10 +16,12 @@ import numpy as np
 def main():
     world = int(sys.argv[1])
     rows = int(sys.argv[2])
+    impl = sys.argv[3] if len(sys.argv) > 3 else "sortmerge"
     import jax
     from jax.sharding import Mesh
     from repro.core import dist_ops as D
     from repro.core.context import make_context
+    from repro.kernels.hash_join import workload_hash_join_sizes
 
     dev = np.array(jax.devices()[:world])
     ctx = make_context(Mesh(dev, ("data",)))
@@ -30,10 +35,14 @@ def main():
     cap = (rows // world) * 2
     gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
     gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+    sizes = workload_hash_join_sizes(max(rows // 10 // world, 1)) \
+        if impl == "hash" else None
     pipe = D.DistributedPipeline(
         ctx, lambda c, a, b: D.dist_join(c, a, b, left_on=["k"],
                                          out_capacity=cap * 16,
-                                         overcommit=3.0))
+                                         overcommit=3.0,
+                                         local_impl=impl,
+                                         local_join_sizes=sizes))
     out, dropped = pipe(gl, gr)             # compile + first run
     jax.block_until_ready(out.nvalid)
     ts = []
@@ -43,7 +52,8 @@ def main():
         jax.block_until_ready(out.nvalid)
         ts.append(time.perf_counter() - t0)
     n_out = int(np.sum(np.asarray(out.nvalid)))
-    print(json.dumps({"world": world, "seconds": float(np.median(ts)),
+    print(json.dumps({"world": world, "impl": impl,
+                      "seconds": float(np.median(ts)),
                       "rows": rows, "out_rows": n_out,
                       "dropped": int(np.max(np.asarray(dropped)))}))
 

@@ -1,11 +1,17 @@
 """Paper Fig. 4 — Distributed Join performance and scaling.
 
 The paper joins two 200M-row relations with 10% key uniqueness at up to
-128 processes and compares Cylon vs Dask/Modin.  Here: our HPTMT
-distributed join at parallelism 1/2/4/8 (forced host devices, one
-subprocess each so device counts don't leak), plus a numpy sort-merge
-baseline as the single-core reference ("pandas" stand-in; pandas is not
-installed in this container).
+128 processes and compares Cylon vs Dask/Modin.  Here, two sweeps against
+a numpy sort-merge baseline as the single-core reference ("pandas"
+stand-in; pandas is not installed in this container):
+
+* the paper scaling sweep — our HPTMT distributed join (default
+  sort-merge local backend) at parallelism 1/2/4/8 (forced host devices,
+  one subprocess each so device counts don't leak);
+* the local-backend sweep — sortmerge vs hash local join through the same
+  distributed pipeline, at a reduced row count (the bucketed hash probe
+  materializes per-bucket match slabs, which is sized for TPU VMEM tiles,
+  not for this CPU-interpret container).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import numpy as np
 from .common import Reporter, run_subprocess_bench, timeit
 
 ROWS = 200_000        # paper: 200M; scaled /1000 for CPU-only container
+BACKEND_ROWS = 20_000  # sortmerge-vs-hash comparison sweep
 
 
 def numpy_join_baseline(rows: int) -> float:
@@ -47,7 +54,8 @@ def run(fast: bool = False):
     rep.add("numpy_1core", "seconds", base_s, rows=rows)
     t1 = None
     for world in (1, 2, 4, 8):
-        res = run_subprocess_bench("_subproc_join.py", world, world, rows)
+        res = run_subprocess_bench("_subproc_join.py", world, world, rows,
+                                   "sortmerge")
         rep.add(f"hptmt_p{world}", "seconds", res["seconds"], rows=rows,
                 out_rows=res["out_rows"], dropped=res["dropped"])
         if world == 1:
@@ -56,6 +64,27 @@ def run(fast: bool = False):
             rep.add(f"hptmt_p{world}", "speedup_vs_p1",
                     t1 / res["seconds"])
     rep.save()
+
+    # local-backend sweep: same pipeline, both local join backends
+    repb = Reporter("join_local_backends")
+    brows = BACKEND_ROWS // 4 if fast else BACKEND_ROWS
+    repb.add("numpy_1core", "seconds", numpy_join_baseline(brows),
+             rows=brows)
+    for world in (1, 2, 4):
+        per_impl = {}
+        for impl in ("sortmerge", "hash"):
+            res = run_subprocess_bench("_subproc_join.py", world, world,
+                                       brows, impl)
+            repb.add(f"{impl}_p{world}", "seconds", res["seconds"],
+                     rows=brows, out_rows=res["out_rows"],
+                     dropped=res["dropped"])
+            per_impl[impl] = res
+        assert per_impl["sortmerge"]["out_rows"] == \
+            per_impl["hash"]["out_rows"], "backend row-count mismatch"
+        repb.add(f"hash_p{world}", "speedup_vs_sortmerge",
+                 per_impl["sortmerge"]["seconds"]
+                 / per_impl["hash"]["seconds"])
+    repb.save()
     return rep
 
 

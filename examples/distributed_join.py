@@ -1,10 +1,12 @@
 """Distributed join (paper Fig. 4's operator) in isolation.
 
     PYTHONPATH=src python examples/distributed_join.py [--parallelism 4]
+        [--local-impl sortmerge|hash]
 
 Shows the HPTMT recipe explicitly: hash-partition -> all_to_all shuffle ->
-local sort-merge join, and verifies the result against a single-partition
-oracle.
+local join (sort-merge by default; ``--local-impl hash`` runs the bucketed
+Pallas hash-join backend instead), and verifies the result against a
+single-partition oracle.
 """
 import argparse
 import os
@@ -15,6 +17,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--parallelism", type=int, default=4)
     ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--local-impl", default="sortmerge",
+                    choices=["sortmerge", "hash"])
     args = ap.parse_args()
 
     if args.parallelism > 1 and "XLA_FLAGS" not in os.environ:
@@ -41,10 +45,16 @@ def main():
     cap = (n // world) * 2
     gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
     gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+    sizes = None
+    if args.local_impl == "hash":
+        from repro.kernels.hash_join import workload_hash_join_sizes
+        sizes = workload_hash_join_sizes(max(n // 10 // world, 1))
     pipe = D.DistributedPipeline(
         ctx, lambda c, a, b: D.dist_join(c, a, b, left_on=["k"],
                                          out_capacity=cap * 8,
-                                         overcommit=3.0))
+                                         overcommit=3.0,
+                                         local_impl=args.local_impl,
+                                         local_join_sizes=sizes))
     out, dropped = pipe(gl, gr)
     got = D.collect_table(ctx, out)
     print(f"parallelism={world}: joined {len(got['k'])} rows "

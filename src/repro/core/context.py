@@ -13,11 +13,40 @@ distributed operators.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# shard_map version shim
+# --------------------------------------------------------------------------
+# ``jax.shard_map`` (with the ``check_vma`` kwarg) only exists on newer jax
+# releases; older ones expose ``jax.experimental.shard_map.shard_map`` (with
+# the ``check_rep`` kwarg).  This is the single place the repo adapts to
+# that API drift — import :func:`shard_map` from here, never from jax
+# directly.
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm, "check_vma"
+    from jax.experimental.shard_map import shard_map as sm
+    return sm, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check: bool = False) -> Callable:
+    """Version-portable ``shard_map`` (replication checking off by default:
+    table ops return per-shard results on purpose)."""
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
 
 
 @dataclasses.dataclass(frozen=True)

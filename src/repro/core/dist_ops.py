@@ -7,7 +7,11 @@ paper's recipe:
 distributed op     implementation (paper Table 5)
 =================  =======================================================
 shuffle            hash partition (Pallas radix kernel) + ``all_to_all``
-join               shuffle both sides + local sort-merge join
+join               shuffle both sides + local join; the local backend is
+                   pluggable via ``local_impl`` — ``"sortmerge"`` (binary
+                   search over sorted keys, default) or ``"hash"``
+                   (bucketed Pallas build+probe, kernels/hash_join) —
+                   so the distributed join runs hash-local end to end
 broadcast join     ``all_gather`` small side + local join   (beyond-paper)
 groupby            shuffle + local groupby-aggregate
 unique             shuffle + local drop_duplicates
@@ -44,7 +48,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import local_ops as L
-from .context import HptmtContext
+from .context import HptmtContext, shard_map
 from .kernel_backend import radix_impl
 from .partition import hash_columns, partition_ids
 from .table import Table
@@ -72,7 +76,7 @@ def distribute_table(ctx: HptmtContext, data: Mapping[str, np.ndarray],
         raise ValueError(f"capacity_per_shard {cap} < rows/shard {per}")
     cols, nvalid = {}, np.zeros((world,), np.int32)
     for s in range(world):
-        lo, hi = s * per, min((s + 1) * per, n)
+        lo, hi = min(s * per, n), min((s + 1) * per, n)
         nvalid[s] = hi - lo
     for k, v in arrays.items():
         if np.issubdtype(v.dtype, np.floating):
@@ -81,7 +85,7 @@ def distribute_table(ctx: HptmtContext, data: Mapping[str, np.ndarray],
             v = v.astype(np.int32)
         buf = np.zeros((world, cap), v.dtype)
         for s in range(world):
-            lo, hi = s * per, min((s + 1) * per, n)
+            lo, hi = min(s * per, n), min((s + 1) * per, n)
             buf[s, : hi - lo] = v[lo:hi]
         cols[k] = jax.device_put(
             buf.reshape(world * cap),
@@ -193,20 +197,31 @@ def shuffle(ctx: HptmtContext, table: Table, key_cols: Sequence[str],
 def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
               left_on: Sequence[str], right_on: Sequence[str] | None = None,
               how: str = "inner", out_capacity: int | None = None,
-              overcommit: float = 2.0, strategy: str = "shuffle"):
+              overcommit: float = 2.0, strategy: str = "shuffle",
+              local_impl: str | None = None,
+              local_join_sizes: Mapping[str, int] | None = None):
     """Distributed join (paper Fig. 4 operator).
 
-    ``strategy='shuffle'``: hash-shuffle both sides on the key, local
-    sort-merge join (Cylon's algorithm).  ``strategy='broadcast'``:
-    all_gather the (small) right side and join locally — no shuffle of the
-    big side (beyond-paper optimization; pick when |right| << |left|).
+    ``strategy='shuffle'``: hash-shuffle both sides on the key, local join
+    (Cylon's algorithm).  ``strategy='broadcast'``: all_gather the (small)
+    right side and join locally — no shuffle of the big side (beyond-paper
+    optimization; pick when |right| << |left|).
+
+    ``local_impl`` selects the local join backend ('sortmerge' | 'hash',
+    default ``kernel_backend.join_impl()``); ``local_join_sizes`` forwards
+    hash-backend static sizing (``num_buckets`` / ``bucket_capacity`` /
+    ``probe_capacity``) — both backends return drop-in identical results,
+    so the whole distributed join runs hash-local under one shard_map.
     """
     right_on = list(right_on) if right_on is not None else list(left_on)
+    jkw = dict(local_join_sizes or {})
     if strategy == "broadcast":
         g = all_gather_table(ctx, right)
-        out = L.join(left, g, left_on=list(left_on), right_on=right_on,
-                     how=how, out_capacity=out_capacity or left.capacity)
-        return out, jnp.int32(0)
+        out, jdrop = L.join(left, g, left_on=list(left_on),
+                            right_on=right_on, how=how,
+                            out_capacity=out_capacity or left.capacity,
+                            impl=local_impl, return_overflow=True, **jkw)
+        return out, jax.lax.psum(jdrop, ctx.row_axes)
     # hash both sides with the same key columns -> same pid function
     lp = partition_ids(left, list(left_on), ctx.world_size)
     rp_tbl = right.rename(dict(zip(right_on, left_on))) \
@@ -216,9 +231,12 @@ def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
     rs, roc = default_shuffle_sizes(ctx, right.capacity, overcommit)
     lsh, ldrop = shuffle_by_pid(ctx, left, lp, ls, loc)
     rsh, rdrop = shuffle_by_pid(ctx, right, rp, rs, roc)
-    out = L.join(lsh, rsh, left_on=list(left_on), right_on=right_on,
-                 how=how, out_capacity=out_capacity or loc)
-    return out, ldrop + rdrop
+    # the local join's overflow (output capacity, hash bucket/probe slabs)
+    # joins the shuffle drops in one "rows lost anywhere" counter
+    out, jdrop = L.join(lsh, rsh, left_on=list(left_on), right_on=right_on,
+                        how=how, out_capacity=out_capacity or loc,
+                        impl=local_impl, return_overflow=True, **jkw)
+    return out, ldrop + rdrop + jax.lax.psum(jdrop, ctx.row_axes)
 
 
 def dist_groupby(ctx: HptmtContext, table: Table, by: Sequence[str],
@@ -423,6 +441,6 @@ class DistributedPipeline:
                 lift, out, is_leaf=lambda x: isinstance(x, Table))
 
         # `spec` is a valid pytree *prefix* for the whole in/out trees
-        f = jax.shard_map(wrapped, mesh=ctx.mesh, in_specs=spec,
-                          out_specs=spec, check_vma=False)
+        f = shard_map(wrapped, mesh=ctx.mesh, in_specs=spec,
+                      out_specs=spec)
         return jax.jit(f)(*tables)

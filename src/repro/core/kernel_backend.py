@@ -2,8 +2,12 @@
 
 Pallas TPU kernels are the *target*; on CPU (this container) the pure-jnp
 references execute instead, and tests exercise the kernels via
-``interpret=True``.  ``REPRO_KERNEL_IMPL`` overrides (ref | pallas |
-pallas_interpret).
+``interpret=True``.  Environment overrides:
+
+* ``REPRO_KERNEL_IMPL``  — table kernels (radix partition, hash-join
+  probe): ``ref | pallas | pallas_interpret``;
+* ``REPRO_JOIN_IMPL``    — local join algorithm: ``sortmerge | hash``;
+* ``REPRO_ATTN_IMPL`` / ``REPRO_MAMBA_IMPL`` — model kernels.
 """
 import os
 
@@ -14,11 +18,24 @@ def backend_platform() -> str:
     return jax.devices()[0].platform
 
 
-def radix_impl() -> str:
+def table_kernel_impl() -> str:
+    """Impl for the table-engine Pallas kernels (radix + hash-join probe)."""
     env = os.environ.get("REPRO_KERNEL_IMPL")
     if env:
         return env
     return "pallas" if backend_platform() == "tpu" else "ref"
+
+
+# historical name — the radix kernel was the first table kernel
+radix_impl = table_kernel_impl
+
+
+def join_impl() -> str:
+    """Local join algorithm: 'sortmerge' (default) or 'hash'."""
+    env = os.environ.get("REPRO_JOIN_IMPL")
+    if env:
+        return env
+    return "sortmerge"
 
 
 def attention_impl() -> str:

@@ -8,10 +8,19 @@ implemented as pure, jittable, *static-shape* JAX functions over
 
 TPU adaptation notes (see DESIGN.md §2):
 * every op is mask-aware: rows ``>= nvalid`` are padding;
-* local join is **sort-merge** (binary search over sorted keys), not a
-  pointer-chasing hash table — sorting/searching vectorize on the VPU;
-* multi-column keys use an exact vectorized lexicographic binary search
-  (:func:`lex_searchsorted`) — no hash collisions, no int64 packing.
+* local join has two backends selected by ``impl`` (default via
+  ``kernel_backend.join_impl()`` / ``REPRO_JOIN_IMPL``):
+
+  - ``"sortmerge"`` — binary search over sorted keys; exact for any key
+    distribution, O((L+R) log) sorts per call;
+  - ``"hash"`` — bucketed build+probe on the ``kernels/hash_join`` Pallas
+    kernel; no sorts, but static per-bucket capacities (overflow is
+    counted, see the kernel package README) — the paper's hash-local-join
+    fast path for shuffled (10%-unique-key style) workloads;
+
+* multi-column keys are exact in both backends: lexicographic binary
+  search (:func:`lex_searchsorted`) / full key-bit equality — no hash
+  collisions, no int64 packing.
 """
 from __future__ import annotations
 
@@ -21,6 +30,9 @@ from typing import Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from ..kernels.hash_join import default_hash_join_sizes, hash_join_plan
+from .kernel_backend import join_impl as _default_join_impl
+from .kernel_backend import table_kernel_impl as _default_kernel_impl
 from .table import Table, isnull_values, null_like
 
 # --------------------------------------------------------------------------
@@ -283,28 +295,72 @@ def aggregate(table: Table, col: str, op: str) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
-# Join (sort-merge, static output capacity)
+# Join (pluggable backend: sort-merge / bucketed hash; static output
+# capacity either way)
 # --------------------------------------------------------------------------
 
 
 def join(left: Table, right: Table, *,
          left_on: Sequence[str], right_on: Sequence[str] | None = None,
          how: str = "inner", out_capacity: int | None = None,
-         suffix: str = "_r", return_overflow: bool = False):
-    """Paper's Join: sort-merge inner/left join with static output capacity.
+         suffix: str = "_r", return_overflow: bool = False,
+         impl: str | None = None, num_buckets: int | None = None,
+         bucket_capacity: int | None = None,
+         probe_capacity: int | None = None,
+         kernel_impl: str | None = None):
+    """Paper's Join: inner/left join with static output capacity.
 
-    The right table is sorted by its keys; each left row binary-searches its
-    match range ``[lo, hi)``; output slot ``j`` is mapped back to its
-    (left row, match offset) pair with a second searchsorted — fully
-    vectorized, no dynamic shapes.  ``out_capacity`` defaults to
-    ``left.capacity`` (overflowing matches are dropped and counted).
+    ``impl`` picks the backend (default ``kernel_backend.join_impl()``):
+    ``"sortmerge"`` or ``"hash"``.  Both emit *identical* output — same
+    rows, same order: left-row-major, and within a left row its matches in
+    the right table's original row order — so they are drop-in
+    interchangeable (conformance: tests/test_join_backends.py).
+
+    ``out_capacity`` defaults to ``left.capacity``; overflowing output
+    rows are dropped and counted (``return_overflow=True`` returns the
+    count).  The hash backend adds ``num_buckets`` / ``bucket_capacity`` /
+    ``probe_capacity`` static sizing (auto-sized from the table capacities
+    when omitted; rows overflowing a bucket slab are dropped and counted
+    into the same overflow metric) and ``kernel_impl``
+    (ref | pallas | pallas_interpret) for the probe kernel.
     """
     if how not in ("inner", "left"):
         raise ValueError("how must be 'inner' or 'left'")
+    impl = impl or _default_join_impl()
     left_on = list(left_on)
     right_on = list(right_on) if right_on is not None else left_on
     out_cap = out_capacity or left.capacity
+    if impl == "sortmerge":
+        return _sortmerge_join(left, right, left_on, right_on, how, out_cap,
+                               suffix, return_overflow)
+    if impl == "hash":
+        return _hash_join(left, right, left_on, right_on, how, out_cap,
+                          suffix, return_overflow, num_buckets,
+                          bucket_capacity, probe_capacity, kernel_impl)
+    raise ValueError(f"unknown join impl {impl!r} "
+                     "(expected 'sortmerge' or 'hash')")
 
+
+def _emit_layout(match_counts: jax.Array, lvalid: jax.Array, how: str):
+    """(inclusive cumsum, exclusive offsets, total) of per-left-row emit
+    counts — the left-row-major layout shared by both join backends (left
+    join emits 1 slot for each ``lvalid`` row with no matches)."""
+    if how == "left":
+        emit = jnp.where(lvalid & (match_counts == 0), 1, match_counts)
+    else:
+        emit = match_counts
+    cum = jnp.cumsum(emit)
+    offs = cum - emit
+    total = cum[-1] if emit.shape[0] > 0 else jnp.int32(0)
+    return cum, offs, total
+
+
+def _sortmerge_join(left: Table, right: Table, left_on, right_on, how,
+                    out_cap, suffix, return_overflow):
+    """Sort-merge backend: the right table is sorted by its keys; each left
+    row binary-searches its match range ``[lo, hi)``; output slot ``j`` is
+    mapped back to its (left row, match offset) pair with a second
+    searchsorted — fully vectorized, no dynamic shapes."""
     rs, rkeys = _sorted_keys_with_sentinel(right, right_on)
     qkeys = tuple(left.columns[k].astype(rs.columns[rk].dtype)
                   for k, rk in zip(left_on, right_on))
@@ -314,14 +370,7 @@ def join(left: Table, right: Table, *,
     hi = jnp.minimum(hi, right.nvalid)
     lvalid = left.valid_mask
     match_counts = jnp.where(lvalid, hi - lo, 0)
-    if how == "left":
-        emit_counts = jnp.where(lvalid & (match_counts == 0), 1, match_counts)
-    else:
-        emit_counts = match_counts
-
-    cum = jnp.cumsum(emit_counts)                       # inclusive
-    offs = cum - emit_counts                            # exclusive
-    total = cum[-1] if left.capacity > 0 else jnp.int32(0)
+    cum, offs, total = _emit_layout(match_counts, lvalid, how)
 
     j = jnp.arange(out_cap, dtype=jnp.int32)
     lrow = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
@@ -329,7 +378,6 @@ def join(left: Table, right: Table, *,
     within = j - offs[lrow]
     matched = within < match_counts[lrow]
     rrow = jnp.clip(lo[lrow] + within, 0, max(right.capacity - 1, 0))
-    out_valid = j < total
 
     cols: dict[str, jax.Array] = {}
     for n in left.names:
@@ -346,6 +394,74 @@ def join(left: Table, right: Table, *,
     out = Table(columns=cols, nvalid=jnp.minimum(total, out_cap))
     if return_overflow:
         return out, jnp.maximum(total - out_cap, 0)
+    return out
+
+
+def _hash_join(left: Table, right: Table, left_on, right_on, how,
+               out_cap, suffix, return_overflow, num_buckets,
+               bucket_capacity, probe_capacity, kernel_impl):
+    """Hash backend: bucketed build+probe (kernels/hash_join) instead of
+    two sorts.  The plan yields per-left-row match counts plus per
+    (probe slot, chain slot) match ranks; matched pairs are scattered into
+    their output slots (offset of the left row + rank of the match), which
+    reproduces the sort-merge output ordering exactly because chain order
+    is original-right-row order."""
+    B, C, Lc = default_hash_join_sizes(left.capacity, right.capacity,
+                                       num_buckets)
+    C = bucket_capacity or C
+    Lc = probe_capacity or Lc
+    qkeys = tuple(left.columns[k].astype(right.columns[rk].dtype)
+                  for k, rk in zip(left_on, right_on))
+    rkeys = tuple(right.columns[rk] for rk in right_on)
+    plan = hash_join_plan(qkeys, left.valid_mask, rkeys, right.valid_mask,
+                          num_buckets=B, bucket_capacity=C,
+                          probe_capacity=Lc,
+                          impl=kernel_impl or _default_kernel_impl())
+
+    # a probe-dropped left row's match status is unknown: it is excluded
+    # from emission entirely (counted in probe_dropped), never emitted as
+    # a fake unmatched row — "overflow rows are dropped and counted"
+    lvalid = left.valid_mask & plan.probed
+    mc = plan.match_counts
+    cum, offs, total = _emit_layout(mc, lvalid, how)
+
+    # scatter matched pairs: slot = offs[left row] + within-row match rank
+    slot = offs[plan.probe_row][:, :, None] + plan.rank      # (B, Lc, C)
+    keep = (plan.rank >= 0) & (slot < out_cap)
+    flat = jnp.where(keep, slot, out_cap).reshape(-1)
+    lrow_pair = jnp.broadcast_to(plan.probe_row[:, :, None], keep.shape)
+    rrow_pair = jnp.broadcast_to(plan.build_row[:, None, :], keep.shape)
+    buf_l = jnp.zeros((out_cap + 1,), jnp.int32) \
+        .at[flat].set(lrow_pair.reshape(-1))
+    buf_r = jnp.zeros((out_cap + 1,), jnp.int32) \
+        .at[flat].set(rrow_pair.reshape(-1))
+    buf_m = jnp.zeros((out_cap + 1,), bool).at[flat].set(keep.reshape(-1))
+    if how == "left":
+        un = lvalid & (mc == 0)
+        flat_u = jnp.where(un & (offs < out_cap), offs, out_cap)
+        buf_l = buf_l.at[flat_u].set(
+            jnp.arange(left.capacity, dtype=jnp.int32))
+    out_lrow = buf_l[:out_cap]
+    out_rrow = buf_r[:out_cap]
+    matched = buf_m[:out_cap]
+
+    cols: dict[str, jax.Array] = {}
+    for n in left.names:
+        cols[n] = left.columns[n][out_lrow]
+    drop_keys = set(right_on) if left_on == right_on else set()
+    for n in right.names:
+        if n in drop_keys:
+            continue
+        name = n + suffix if n in cols else n
+        v = right.columns[n][out_rrow]
+        if how == "left":
+            v = jnp.where(matched, v, null_like(v))
+        cols[name] = v
+    out = Table(columns=cols, nvalid=jnp.minimum(total, out_cap))
+    if return_overflow:
+        overflow = (jnp.maximum(total - out_cap, 0)
+                    + plan.build_dropped + plan.probe_dropped)
+        return out, overflow
     return out
 
 

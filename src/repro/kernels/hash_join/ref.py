@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the bucketed hash-join probe kernel.
+
+Both join sides arrive already *bucket-grouped* (ops.py does the grouping
+with the ``hash_partition`` radix ranks): for each of ``B`` buckets there
+is a probe slab of ``Lc`` slots and a build slab of ``C`` slots, each slot
+holding the row's key bit-planes (``K`` int32 planes per key) plus an
+occupancy flag.  The probe computes, per bucket:
+
+* ``counts`` — ``(B, Lc)`` int32 number of build matches per probe slot;
+* ``rank``   — ``(B, Lc, C)`` int32 match rank of chain slot ``p`` within
+  probe slot ``l``'s matches (exclusive count of earlier matching chain
+  slots), or ``-1`` where the pair does not match.
+
+A pair matches iff *all* key bit-planes are equal and both slots are
+occupied.  Chain order is build-insertion order, which ops.py keeps equal
+to original row order (stable radix ranks) — this is what makes the hash
+join's output row order bit-identical to the sort-merge join's.
+"""
+import jax.numpy as jnp
+
+
+def bucket_probe_ref(pbits: jnp.ndarray, pocc: jnp.ndarray,
+                     bbits: jnp.ndarray, bocc: jnp.ndarray):
+    """pbits (B, K, Lc) int32, pocc (B, Lc) int32 0/1, bbits (B, K, C),
+    bocc (B, C) -> (counts (B, Lc) int32, rank (B, Lc, C) int32)."""
+    match = (pocc[:, :, None] > 0) & (bocc[:, None, :] > 0)
+    num_keys = pbits.shape[1]
+    for k in range(num_keys):
+        match = match & (pbits[:, k, :, None] == bbits[:, k, None, :])
+    m = match.astype(jnp.int32)
+    counts = jnp.sum(m, axis=2)
+    excl = jnp.cumsum(m, axis=2) - m
+    rank = jnp.where(match, excl, -1)
+    return counts, rank

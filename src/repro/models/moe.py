@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.context import shard_map
 from ..kernels.hash_partition import radix_histogram_ranks
 from . import layers as Ly
 
@@ -174,12 +175,11 @@ def moe_shuffle(p, cfg, x, policy, capacity_factor: float = 1.25):
     # numerics-identical (the expert GEMMs cast at use anyway)
     cast = (lambda w: w.astype(jnp.bfloat16)) \
         if cfg.train.bf16_weight_cast else (lambda w: w)
-    y, aux, _dropped = jax.shard_map(
+    y, aux, _dropped = shard_map(
         local, mesh=mesh,
         in_specs=(batch_spec, P(), P(maxis, None, None),
                   P(maxis, None, None), P(maxis, None, None)),
         out_specs=(batch_spec, aux_spec, aux_spec),
-        check_vma=False,
     )(x, p["router"], cast(p["e_gate"]), cast(p["e_up"]),
       cast(p["e_down"]))
     return y, jnp.mean(aux)
@@ -230,12 +230,11 @@ def moe_decode(p, cfg, x, policy, capacity_factor: float = 4.0):
         y = jax.lax.psum(part, maxis)
         return y.reshape(b, s, d).astype(x_loc.dtype), aux[None]
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(batch_spec, P(), P(maxis, None, None),
                   P(maxis, None, None), P(maxis, None, None)),
         out_specs=(batch_spec, aux_spec),
-        check_vma=False,
     )(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
     return y, jnp.mean(aux)
 

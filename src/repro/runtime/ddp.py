@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.context import HptmtContext
+from ..core.context import HptmtContext, shard_map
 from ..optim import adamw, compression
 
 
@@ -50,9 +50,8 @@ def make_ddp_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
 
     rep = P()
     bspec = P(axes)
-    step = jax.shard_map(
+    step = shard_map(
         local_step, mesh=mesh,
         in_specs=(rep, rep, rep, bspec),
-        out_specs=(rep, rep, rep, rep),
-        check_vma=False)
+        out_specs=(rep, rep, rep, rep))
     return jax.jit(step, donate_argnums=(0, 1, 2))

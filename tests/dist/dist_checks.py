@@ -1,0 +1,182 @@
+"""Multi-device distributed operator checks (run by tests/test_dist.py).
+
+Runs in a subprocess with ``--xla_force_host_platform_device_count=8`` so
+the main pytest process keeps the single real CPU device.  Every check
+builds a global row-sharded table, runs a distributed operator through
+:class:`DistributedPipeline` (one shard_map program), collects the result
+back to numpy and compares it with an independent numpy oracle.
+
+Prints ``DIST CHECKS PASSED`` on success (the driver asserts on it).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.core import dist_ops as D  # noqa: E402
+from repro.core.context import make_context  # noqa: E402
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from oracles import as_sets  # noqa: E402
+
+WORLD = 8
+
+
+def make_ctx():
+    dev = np.array(jax.devices()[:WORLD])
+    return make_context(Mesh(dev, ("data",)))
+
+
+def check_roundtrip(ctx, rng):
+    data = {"a": rng.integers(0, 100, 41).astype(np.int32),
+            "b": rng.normal(size=41).astype(np.float32)}
+    t = D.distribute_table(ctx, data, capacity_per_shard=8)
+    back = D.collect_table(ctx, t)
+    for k in data:
+        np.testing.assert_array_equal(back[k], data[k])
+    print("roundtrip ok")
+
+
+def check_join(ctx, rng, local_impl):
+    rows, nkeys = 160, 16
+    left = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+            "lv": rng.normal(size=rows).astype(np.float32)}
+    right = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+             "rv": rng.normal(size=rows).astype(np.float32)}
+    cap = (rows // WORLD) * 3
+    gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
+    gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+    sizes = {"num_buckets": 16, "bucket_capacity": rows,
+             "probe_capacity": rows}
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a, b: D.dist_join(
+            c, a, b, left_on=["k"], out_capacity=rows * rows // nkeys * 4,
+            overcommit=4.0, local_impl=local_impl,
+            local_join_sizes=sizes if local_impl == "hash" else None))
+    out, dropped = pipe(gl, gr)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    # numpy oracle: every (l, r) pair with equal keys
+    lk, rk = left["k"], right["k"]
+    pairs = [(i, j) for i in range(rows) for j in range(rows)
+             if lk[i] == rk[j]]
+    want = {"k": lk[[i for i, _ in pairs]],
+            "lv": left["lv"][[i for i, _ in pairs]],
+            "rv": right["rv"][[j for _, j in pairs]]}
+    assert as_sets(got) == as_sets(want), f"join[{local_impl}] mismatch"
+    print(f"dist_join[{local_impl}] ok ({len(pairs)} rows)")
+
+
+def check_join_backends_agree(ctx, rng):
+    rows, nkeys = 120, 12
+    left = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+            "lv": rng.normal(size=rows).astype(np.float32)}
+    right = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+             "rv": rng.normal(size=rows).astype(np.float32)}
+    cap = (rows // WORLD) * 3
+    outs = {}
+    for impl in ("sortmerge", "hash"):
+        gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
+        gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+        sizes = {"num_buckets": 8, "bucket_capacity": rows,
+                 "probe_capacity": rows}
+        pipe = D.DistributedPipeline(
+            ctx, lambda c, a, b, impl=impl: D.dist_join(
+                c, a, b, left_on=["k"], out_capacity=2048, overcommit=4.0,
+                local_impl=impl,
+                local_join_sizes=sizes if impl == "hash" else None))
+        out, dropped = pipe(gl, gr)
+        assert int(np.max(np.asarray(dropped))) == 0
+        outs[impl] = D.collect_table(ctx, out)
+    a, b = outs["sortmerge"], outs["hash"]
+    assert set(a) == set(b)
+    for k in a:  # per-shard local order is identical, so full equality
+        np.testing.assert_array_equal(a[k], b[k])
+    print("dist_join backends bit-identical ok")
+
+
+def check_groupby(ctx, rng):
+    data = {"k": rng.integers(0, 9, 100).astype(np.int32),
+            "v": rng.normal(size=100).astype(np.float32)}
+    t = D.distribute_table(ctx, data, capacity_per_shard=40)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a: D.dist_groupby(c, a, ["k"], {"v": "sum"},
+                                         overcommit=4.0))
+    out, dropped = pipe(t)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    uk = np.unique(data["k"])
+    want = {k: float(data["v"][data["k"] == k].sum()) for k in uk}
+    assert len(got["k"]) == len(uk)
+    for k, s in zip(got["k"], got["v_sum"]):
+        np.testing.assert_allclose(s, want[int(k)], rtol=1e-4, atol=1e-4)
+    print("dist_groupby ok")
+
+
+def check_unique(ctx, rng):
+    data = {"k": rng.integers(0, 20, 120).astype(np.int32)}
+    t = D.distribute_table(ctx, data, capacity_per_shard=40)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a: D.dist_unique(c, a, ["k"], overcommit=4.0))
+    out, dropped = pipe(t)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    assert sorted(got["k"]) == sorted(np.unique(data["k"]))
+    print("dist_unique ok")
+
+
+def check_sort(ctx, rng):
+    data = {"k": rng.integers(0, 1000, 90).astype(np.int32),
+            "v": rng.normal(size=90).astype(np.float32)}
+    t = D.distribute_table(ctx, data, capacity_per_shard=40)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a: D.dist_sort(c, a, ["k"], overcommit=4.0))
+    out, dropped = pipe(t)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    np.testing.assert_array_equal(got["k"], np.sort(data["k"]))
+    assert as_sets(got) == as_sets(data)
+    print("dist_sort ok")
+
+
+def check_repartition(ctx, rng):
+    # skewed layout: all rows start on few shards
+    data = {"a": np.arange(50, dtype=np.int32)}
+    t = D.distribute_table(ctx, data, capacity_per_shard=50)
+    pipe = D.DistributedPipeline(ctx,
+                                 lambda c, a: D.dist_repartition(c, a))
+    out, dropped = pipe(t)
+    assert int(np.max(np.asarray(dropped))) == 0
+    nv = np.asarray(out.nvalid).reshape(-1)
+    # contract: no shard above the ceiling target (rank // ceil(N/W))
+    assert nv.max() <= -(-50 // WORLD), nv
+    assert nv.sum() == 50, nv
+    got = D.collect_table(ctx, out)
+    assert sorted(got["a"]) == list(range(50))
+    print("dist_repartition ok")
+
+
+def main():
+    ctx = make_ctx()
+    assert ctx.world_size == WORLD, ctx.world_size
+    rng = np.random.default_rng(0)
+    check_roundtrip(ctx, rng)
+    check_join(ctx, rng, "sortmerge")
+    check_join(ctx, rng, "hash")
+    check_join_backends_agree(ctx, rng)
+    check_groupby(ctx, rng)
+    check_unique(ctx, rng)
+    check_sort(ctx, rng)
+    check_repartition(ctx, rng)
+    print("DIST CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

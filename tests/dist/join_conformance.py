@@ -1,0 +1,80 @@
+"""Subprocess worker for tests/test_join_backends.py: distributed join
+conformance at a given world size.
+
+Usage: XLA_FLAGS=...device_count=W python join_conformance.py W
+
+For each key distribution x join type, runs dist_join with BOTH local
+backends under one shard_map and checks (a) the backends are
+bit-identical, (b) both match a brute-force numpy oracle as multisets.
+Prints ``JOIN CONFORMANCE PASSED`` on success.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from oracles import as_sets, np_join  # noqa: E402
+
+
+def distributions(rng, rows):
+    uniq = np.arange(rows, dtype=np.int32)
+    rng.shuffle(uniq)
+    return {
+        "unique": (uniq, rng.permutation(uniq)),
+        "dup10": (rng.integers(0, max(rows // 10, 1), rows)
+                  .astype(np.int32),
+                  rng.integers(0, max(rows // 10, 1), rows)
+                  .astype(np.int32)),
+        "alldup": (np.full(rows, 7, np.int32), np.full(rows, 7, np.int32)),
+    }
+
+
+def main():
+    world = int(sys.argv[1])
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import dist_ops as D
+    from repro.core.context import make_context
+
+    dev = np.array(jax.devices()[:world])
+    ctx = make_context(Mesh(dev, ("data",)))
+    rng = np.random.default_rng(world)
+    rows = 96
+    for name, (lk, rk) in distributions(rng, rows).items():
+        left = {"k": lk, "lv": rng.normal(size=rows).astype(np.float32)}
+        right = {"k": rk, "rv": rng.normal(size=rows).astype(np.float32)}
+        cap = (rows // world) * 4
+        out_cap = rows * rows + rows       # alldup worst case
+        sizes = {"num_buckets": 8, "bucket_capacity": rows,
+                 "probe_capacity": rows}
+        for how in ("inner", "left"):
+            got = {}
+            for impl in ("sortmerge", "hash"):
+                gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
+                gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+                pipe = D.DistributedPipeline(
+                    ctx, lambda c, a, b, impl=impl, how=how: D.dist_join(
+                        c, a, b, left_on=["k"], how=how,
+                        out_capacity=out_cap, overcommit=4.0,
+                        local_impl=impl,
+                        local_join_sizes=(sizes if impl == "hash"
+                                          else None)))
+                out, dropped = pipe(gl, gr)
+                assert int(np.max(np.asarray(dropped))) == 0, \
+                    (name, how, impl)
+                got[impl] = D.collect_table(ctx, out)
+            for k in got["sortmerge"]:
+                np.testing.assert_array_equal(
+                    np.nan_to_num(got["sortmerge"][k], nan=-1e9),
+                    np.nan_to_num(got["hash"][k], nan=-1e9),
+                    err_msg=f"{name}/{how}/{k}")
+            want = np_join(left, right, how)
+            assert as_sets(got["hash"]) == as_sets(want), (name, how)
+            print(f"{name}/{how}: ok ({len(want['k'])} rows)", flush=True)
+    print("JOIN CONFORMANCE PASSED")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Shared numpy join oracles for the conformance suites.
+
+Imported both by in-process pytest modules (tests/ is on sys.path via the
+conftest mechanism) and by the tests/dist/*.py subprocess workers (which
+add this directory to sys.path explicitly).  numpy-only: subprocesses run
+without pytest.
+"""
+import numpy as np
+
+
+def np_join(left: dict, right: dict, how: str) -> dict:
+    """Brute-force inner/left join on column 'k' of {'k','lv'} x
+    {'k','rv'}; row order matches the engine's contract (left-row-major,
+    matches in right original row order; unmatched left rows emit NaN
+    right values)."""
+    lk, rk = left["k"], right["k"]
+    rows = []
+    for i in range(len(lk)):
+        matches = [j for j in range(len(rk)) if rk[j] == lk[i]]
+        if matches:
+            rows += [(i, j) for j in matches]
+        elif how == "left":
+            rows.append((i, None))
+    out = {"k": [], "lv": [], "rv": []}
+    for i, j in rows:
+        out["k"].append(lk[i])
+        out["lv"].append(left["lv"][i])
+        out["rv"].append(right["rv"][j] if j is not None else np.nan)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def as_sets(data: dict, cols=None):
+    """Row multiset as a sorted list of tuples (order-insensitive compare,
+    NaN-tolerant)."""
+    cols = list(cols) if cols is not None else sorted(data.keys())
+    n = len(np.asarray(data[cols[0]]))
+    rows = []
+    for i in range(n):
+        rows.append(tuple(round(float(np.nan_to_num(
+            np.asarray(data[c])[i], nan=-1e9)), 4) for c in cols))
+    return sorted(rows)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.context import shard_map
 from repro.roofline.hlo_cost import analyze_hlo_text, parse_module
 
 
@@ -89,8 +90,7 @@ def test_collectives_counted_with_trip_multiplier():
         y, _ = jax.lax.scan(body, x, None, length=5)
         return y
 
-    f = jax.shard_map(scanned, mesh=mesh, in_specs=P(), out_specs=P(),
-                      check_vma=False)
+    f = shard_map(scanned, mesh=mesh, in_specs=P(), out_specs=P())
     c = analyze_hlo_text(_text(f, jnp.zeros((8, 8))))
     # single-device psum may fold away; accept 0 or 5 but never 1
     n = c.coll_counts.get("all-reduce", 0)
@@ -112,8 +112,8 @@ def test_wire_factor_detects_bf16_psum():
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
     mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
-    f = jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
-                      in_specs=P(), out_specs=P(), check_vma=False)
+    f = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                  in_specs=P(), out_specs=P())
     text = jax.jit(f).lower(jnp.zeros((64, 64), jnp.bfloat16)) \
         .compile().as_text()
     comps = parse_module(text)

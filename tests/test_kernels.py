@@ -10,6 +10,8 @@ import pytest
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_join.kernel import bucket_probe_buckets
+from repro.kernels.hash_join.ref import bucket_probe_ref
 from repro.kernels.hash_partition import (partition_plan,
                                           radix_histogram_ranks)
 from repro.kernels.hash_partition.ref import radix_histogram_ranks_ref
@@ -72,6 +74,60 @@ def test_radix_ranks_are_stable():
     pid = jnp.asarray(np.array([2, 0, 2, 2, 0, 1], np.int32))
     _, ranks = radix_histogram_ranks_ref(pid, 3)
     np.testing.assert_array_equal(np.asarray(ranks), [0, 0, 1, 2, 1, 0])
+
+
+# --------------------------------------------------------------------------
+# hash_join bucketed probe kernel
+# --------------------------------------------------------------------------
+
+
+def _probe_slabs(n_buckets, num_keys, probe_cap, chain_cap, seed,
+                 key_range=6, occ_p=0.8):
+    rng = np.random.default_rng(seed)
+    pbits = rng.integers(0, key_range,
+                         (n_buckets, num_keys, probe_cap)).astype(np.int32)
+    bbits = rng.integers(0, key_range,
+                         (n_buckets, num_keys, chain_cap)).astype(np.int32)
+    pocc = (rng.random((n_buckets, probe_cap)) < occ_p).astype(np.int32)
+    bocc = (rng.random((n_buckets, chain_cap)) < occ_p).astype(np.int32)
+    return tuple(map(jnp.asarray, (pbits, pocc, bbits, bocc)))
+
+
+@pytest.mark.parametrize("B,K,Lc,C", [
+    (1, 1, 8, 8), (4, 1, 16, 32), (8, 2, 32, 16), (16, 3, 64, 64),
+    (3, 2, 128, 8),
+])
+def test_bucket_probe_interpret_matches_ref(B, K, Lc, C):
+    pbits, pocc, bbits, bocc = _probe_slabs(B, K, Lc, C, B * 131 + Lc)
+    c_ref, r_ref = bucket_probe_ref(pbits, pocc, bbits, bocc)
+    c_k, r_k = bucket_probe_buckets(pbits, pocc, bbits, bocc,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_ref))
+
+
+def test_bucket_probe_ranks_are_within_row_match_order():
+    # one bucket, keys [5,7], chain [7,5,7,9,7]: row 0 matches slots 2 with
+    # ranks 0,1 ... hand-checked
+    pbits = jnp.asarray(np.array([[[5, 7]]], np.int32))
+    bbits = jnp.asarray(np.array([[[7, 5, 7, 9, 7]]], np.int32))
+    pocc = jnp.ones((1, 2), jnp.int32)
+    bocc = jnp.ones((1, 5), jnp.int32)
+    counts, rank = bucket_probe_ref(pbits, pocc, bbits, bocc)
+    np.testing.assert_array_equal(np.asarray(counts), [[1, 3]])
+    np.testing.assert_array_equal(np.asarray(rank)[0],
+                                  [[-1, 0, -1, -1, -1],
+                                   [0, -1, 1, -1, 2]])
+
+
+def test_bucket_probe_ignores_unoccupied_slots():
+    pbits = jnp.asarray(np.array([[[1, 1]]], np.int32))
+    bbits = jnp.asarray(np.array([[[1, 1, 1]]], np.int32))
+    pocc = jnp.asarray(np.array([[1, 0]], np.int32))
+    bocc = jnp.asarray(np.array([[1, 0, 1]], np.int32))
+    counts, rank = bucket_probe_ref(pbits, pocc, bbits, bocc)
+    np.testing.assert_array_equal(np.asarray(counts), [[2, 0]])
+    np.testing.assert_array_equal(np.asarray(rank)[0, 0], [0, -1, 1])
 
 
 # --------------------------------------------------------------------------

@@ -6,7 +6,12 @@ operators — the kind of invariant the HPTMT composition model relies on.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import local_ops as L
 from repro.core.partition import hash_columns, partition_ids
