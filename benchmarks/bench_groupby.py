@@ -1,0 +1,84 @@
+"""Local GroupBy/Aggregate backend sweep — sort vs bucketed hash.
+
+GroupBy/Aggregate is the hot path of ``dist_groupby`` / ``dist_unique``
+/ ``dist_standard_scale``; the sort backend pays a full lexicographic
+tuple sort per call, the hash backend one bucketed accumulate pass whose
+cost scales with the per-bucket slab area.  This sweep times both local
+backends (jitted, all five aggregations) across key cardinalities at a
+fixed row count against a numpy sort-reduce baseline, and records the
+crossover into ``results/bench.json``.  Bucket slabs are sized per
+cardinality (low cardinality needs few, deep buckets — the static-shape
+contract), and both backends must report identical group counts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from .common import Reporter, timeit
+
+ROWS = 1024
+CARDS = (16, 128, 1024)
+AGGS = {"v": ["sum", "count", "mean", "min", "max"]}
+
+
+def hash_sizes(nkeys: int, rows: int) -> dict:
+    """Slab sizing per cardinality: worst expected bucket load with >=2x
+    headroom (capacities are worst-case *per bucket*)."""
+    if nkeys <= 16:
+        return {"num_buckets": 8, "bucket_capacity": rows}
+    if nkeys <= 128:
+        return {"num_buckets": 32, "bucket_capacity": max(64, rows // 4)}
+    return {"num_buckets": 128, "bucket_capacity": max(32, rows // 32)}
+
+
+def numpy_groupby_baseline(keys: np.ndarray, vals: np.ndarray) -> float:
+    def run():
+        order = np.argsort(keys, kind="stable")
+        ks, vs = keys[order], vals[order]
+        b = np.flatnonzero(np.r_[True, ks[1:] != ks[:-1]]) \
+            if len(ks) else np.zeros(0, np.int64)
+        sums = np.add.reduceat(vs, b) if len(b) else np.zeros(0)
+        counts = np.diff(np.r_[b, len(ks)])
+        return sums, counts
+
+    return timeit(run, warmup=1, iters=3)
+
+
+def run(fast: bool = False):
+    from repro.core import local_ops as L
+    from repro.core.table import Table
+
+    rep = Reporter("groupby_local_backends")
+    rows = ROWS // 4 if fast else ROWS
+    rng = np.random.default_rng(0)
+    for nkeys in CARDS:
+        nkeys = min(nkeys, rows)
+        keys = rng.integers(0, nkeys, rows).astype(np.int32)
+        vals = rng.integers(-100, 100, rows).astype(np.float32)
+        rep.add(f"numpy_k{nkeys}", "seconds",
+                numpy_groupby_baseline(keys, vals), rows=rows)
+        t = Table.from_dict({"k": keys, "v": vals})
+        per_impl = {}
+        for impl in ("sort", "hash"):
+            kw = hash_sizes(nkeys, rows) if impl == "hash" else {}
+            fn = jax.jit(partial(L.groupby_aggregate, by=["k"], aggs=AGGS,
+                                 impl=impl, return_overflow=True, **kw))
+            out, over = jax.block_until_ready(fn(t))
+            assert int(over) == 0, (impl, nkeys)
+            secs = timeit(lambda: jax.block_until_ready(fn(t)))
+            per_impl[impl] = (secs, int(out.nvalid))
+            rep.add(f"{impl}_k{nkeys}", "seconds", secs, rows=rows,
+                    groups=int(out.nvalid))
+        assert per_impl["sort"][1] == per_impl["hash"][1], \
+            "backend group-count mismatch"
+        rep.add(f"hash_k{nkeys}", "speedup_vs_sort",
+                per_impl["sort"][0] / per_impl["hash"][0])
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

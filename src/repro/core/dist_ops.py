@@ -13,8 +13,12 @@ join               shuffle both sides + local join; the local backend is
                    (bucketed Pallas build+probe, kernels/hash_join) —
                    so the distributed join runs hash-local end to end
 broadcast join     ``all_gather`` small side + local join   (beyond-paper)
-groupby            shuffle + local groupby-aggregate
-unique             shuffle + local drop_duplicates
+groupby            shuffle + local groupby-aggregate; the local backend is
+                   pluggable via ``local_impl`` — ``"sort"`` (default) or
+                   ``"hash"`` (bucketed Pallas hash-accumulate,
+                   kernels/hash_groupby)
+unique             shuffle + local drop_duplicates (under ``"hash"`` a
+                   key-only hash groupby — same pluggable backend)
 sort (OrderBy)     sample-sort: local sort + splitter ``all_gather`` +
                    range partition + ``all_to_all`` + local sort
 difference/        shuffle both sides + local set op
@@ -241,21 +245,42 @@ def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
 
 def dist_groupby(ctx: HptmtContext, table: Table, by: Sequence[str],
                  aggs: Mapping[str, Sequence[str] | str],
-                 overcommit: float = 2.0):
+                 overcommit: float = 2.0, local_impl: str | None = None,
+                 groupby_sizes: Mapping[str, int] | None = None):
     """Distributed GroupBy+Aggregate: shuffle on keys + local groupby.
+
+    ``local_impl`` selects the local aggregation backend ('sort' | 'hash',
+    default ``kernel_backend.groupby_impl()``); ``groupby_sizes`` forwards
+    hash-backend static sizing (``num_buckets`` / ``bucket_capacity``).
+    Both backends return drop-in identical results, so the whole
+    distributed groupby runs hash-local under one shard_map; the hash
+    path's bucket-overflow drops join the shuffle drops in the returned
+    counter.
 
     Note: mean aggregations are computed from shuffled raw rows, so they are
     exact (not an average-of-averages)."""
     sh, dropped = shuffle(ctx, table, by, overcommit=overcommit)
-    return L.groupby_aggregate(sh, list(by), aggs), dropped
+    out, gdrop = L.groupby_aggregate(sh, list(by), aggs, impl=local_impl,
+                                     return_overflow=True,
+                                     **dict(groupby_sizes or {}))
+    return out, dropped + jax.lax.psum(gdrop, ctx.row_axes)
 
 
 def dist_unique(ctx: HptmtContext, table: Table, subset: Sequence[str],
-                overcommit: float = 2.0):
+                overcommit: float = 2.0, local_impl: str | None = None,
+                groupby_sizes: Mapping[str, int] | None = None):
     """Paper §4.3: 'the distributed unique operator ensures no duplicate
-    records are used for deep learning across all processes'."""
+    records are used for deep learning across all processes'.
+
+    Shuffle on the key + local drop_duplicates — which under
+    ``local_impl='hash'`` is a *key-only hash groupby* on the
+    ``kernels/hash_groupby`` plan, sharing the pluggable aggregation
+    backend (``groupby_sizes`` forwards its static sizing)."""
     sh, dropped = shuffle(ctx, table, subset, overcommit=overcommit)
-    return L.drop_duplicates(sh, list(subset)), dropped
+    out, gdrop = L.drop_duplicates(sh, list(subset), impl=local_impl,
+                                   return_overflow=True,
+                                   **dict(groupby_sizes or {}))
+    return out, dropped + jax.lax.psum(gdrop, ctx.row_axes)
 
 
 def dist_difference(ctx: HptmtContext, a: Table, b: Table,
@@ -362,23 +387,31 @@ def dist_repartition(ctx: HptmtContext, table: Table,
 
 
 def dist_standard_scale(ctx: HptmtContext, table: Table,
-                        cols: Sequence[str]) -> Table:
+                        cols: Sequence[str],
+                        local_impl: str | None = None) -> Table:
     """(x - mean) / std per column with mean/std over ALL shards' valid
     rows (exact psum moments) — the distributed equivalent of the paper's
     sklearn preprocessing step.  Per-shard scaling would silently change
-    results with parallelism; this keeps them parallelism-invariant."""
+    results with parallelism; this keeps them parallelism-invariant.
+
+    Two-pass like the local op: global means first (psum of sums), then
+    the psum'd variance of deviations about them — exact even when
+    ``|mean| >> std`` (the one-pass ``E[x^2] - m^2`` form cancels in
+    float32).  ``local_impl`` selects how each shard computes its
+    per-column moments (``L.column_moments``): inline masked reductions
+    (None, the fast path) or the pluggable 'sort'/'hash' aggregation
+    backend — so a whole preprocessing pipeline can run one backend end
+    to end."""
     out = dict(table.columns)
-    valid = table.valid_mask
-    n = jax.lax.psum(table.nvalid.astype(jnp.float32), ctx.row_axes)
-    n = jnp.maximum(n, 1.0)
+    s1, _, n = L.column_moments(table, cols, impl=local_impl)
+    n = jnp.maximum(jax.lax.psum(n, ctx.row_axes), 1.0)
+    means = {k: jax.lax.psum(s1[k], ctx.row_axes) / n for k in cols}
+    _, sd2, _ = L.column_moments(table, cols, impl=local_impl,
+                                 center=means)
     for k in cols:
         x = out[k].astype(jnp.float32)
-        s1 = jax.lax.psum(jnp.sum(jnp.where(valid, x, 0.0)), ctx.row_axes)
-        s2 = jax.lax.psum(jnp.sum(jnp.where(valid, x * x, 0.0)),
-                          ctx.row_axes)
-        m = s1 / n
-        v = jnp.maximum(s2 / n - m * m, 0.0)
-        out[k] = (x - m) / jnp.sqrt(v + 1e-12)
+        v = jax.lax.psum(sd2[k], ctx.row_axes) / n
+        out[k] = (x - means[k]) / jnp.sqrt(v + 1e-12)
     return Table(columns=out, nvalid=table.nvalid)
 
 

@@ -5,8 +5,9 @@ references execute instead, and tests exercise the kernels via
 ``interpret=True``.  Environment overrides:
 
 * ``REPRO_KERNEL_IMPL``  — table kernels (radix partition, hash-join
-  probe): ``ref | pallas | pallas_interpret``;
+  probe, hash-groupby accumulate): ``ref | pallas | pallas_interpret``;
 * ``REPRO_JOIN_IMPL``    — local join algorithm: ``sortmerge | hash``;
+* ``REPRO_GROUPBY_IMPL`` — local groupby/dedup algorithm: ``sort | hash``;
 * ``REPRO_ATTN_IMPL`` / ``REPRO_MAMBA_IMPL`` — model kernels.
 """
 import os
@@ -36,6 +37,15 @@ def join_impl() -> str:
     if env:
         return env
     return "sortmerge"
+
+
+def groupby_impl() -> str:
+    """Local groupby/aggregate/dedup algorithm: 'sort' (default) or
+    'hash'."""
+    env = os.environ.get("REPRO_GROUPBY_IMPL")
+    if env:
+        return env
+    return "sort"
 
 
 def attention_impl() -> str:

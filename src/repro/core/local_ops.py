@@ -18,6 +18,24 @@ TPU adaptation notes (see DESIGN.md §2):
     counted, see the kernel package README) — the paper's hash-local-join
     fast path for shuffled (10%-unique-key style) workloads;
 
+* the aggregation family (groupby_aggregate, drop_duplicates) has the
+  same two backends via ``impl`` (default ``kernel_backend.groupby_impl()``
+  / ``REPRO_GROUPBY_IMPL``):
+
+  - ``"sort"`` — lexicographic tuple sort + segment reductions;
+  - ``"hash"`` — bucketed hash-accumulate on the ``kernels/hash_groupby``
+    Pallas kernel: sum/count/mean/min/max per distinct key in one pass,
+    **no sort primitive anywhere on the path** (canonical key order is
+    recovered with a pairwise count-smaller rank; auto-sizing keeps the
+    bucket count within the radix ranking's sort-free range — an
+    explicit ``num_buckets`` > ``bucketing.MAX_RADIX_BUCKETS`` opts out);
+
+  both emit *canonicalized* output — one row per distinct key, sorted by
+  key, counts int32 — so they are bit-identical and drop-in
+  interchangeable (conformance: tests/test_groupby_backends.py; float
+  ``sum``/``mean`` are bit-identical whenever addition is exact, e.g.
+  integer-valued data, and agree to rounding otherwise);
+
 * multi-column keys are exact in both backends: lexicographic binary
   search (:func:`lex_searchsorted`) / full key-bit equality — no hash
   collisions, no int64 packing.
@@ -30,7 +48,10 @@ from typing import Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from ..kernels.hash_groupby import (default_hash_groupby_sizes,
+                                    hash_groupby_plan)
 from ..kernels.hash_join import default_hash_join_sizes, hash_join_plan
+from .kernel_backend import groupby_impl as _default_groupby_impl
 from .kernel_backend import join_impl as _default_join_impl
 from .kernel_backend import table_kernel_impl as _default_kernel_impl
 from .table import Table, isnull_values, null_like
@@ -186,9 +207,39 @@ def _sorted_keys_with_sentinel(table: Table, by: Sequence[str]):
 # --------------------------------------------------------------------------
 
 
-def drop_duplicates(table: Table, subset: Sequence[str] | None = None) -> Table:
-    """Keep the first occurrence of each distinct key (paper: Unique)."""
+def drop_duplicates(table: Table, subset: Sequence[str] | None = None, *,
+                    impl: str | None = None, return_overflow: bool = False,
+                    num_buckets: int | None = None,
+                    bucket_capacity: int | None = None,
+                    kernel_impl: str | None = None):
+    """Keep the first occurrence of each distinct key (paper: Unique).
+
+    ``impl`` picks the backend (default ``kernel_backend.groupby_impl()``):
+    ``"sort"`` (stable sort + boundary compaction) or ``"hash"`` (key-only
+    hash groupby on the ``kernels/hash_groupby`` plan — no sort).  Both
+    emit the *canonical* table: one row per distinct key, sorted by the
+    ``subset`` columns, payload columns taken from the key's first
+    occurrence — bit-identical across backends.  The hash backend adds
+    static ``num_buckets`` / ``bucket_capacity`` sizing (auto-sized from
+    the capacity when omitted); rows overflowing a bucket slab are
+    dropped and counted (``return_overflow=True`` returns the count).
+    """
     subset = list(subset) if subset is not None else list(table.names)
+    impl = impl or _default_groupby_impl()
+    if impl == "sort":
+        out, over = _sort_drop_duplicates(table, subset), jnp.int32(0)
+    elif impl == "hash":
+        out, over = _hash_drop_duplicates(table, subset, num_buckets,
+                                          bucket_capacity, kernel_impl)
+    else:
+        raise ValueError(f"unknown groupby impl {impl!r} "
+                         "(expected 'sort' or 'hash')")
+    if return_overflow:
+        return out, over
+    return out
+
+
+def _sort_drop_duplicates(table: Table, subset: list) -> Table:
     ts = sort_values(table, subset)
     valid = ts.valid_mask
     neq_prev = jnp.zeros(ts.capacity, bool)
@@ -199,6 +250,20 @@ def drop_duplicates(table: Table, subset: Sequence[str] | None = None) -> Table:
     first = jnp.arange(ts.capacity) == 0
     boundary = (first | neq_prev) & valid
     return compact(ts, boundary)
+
+
+def _hash_drop_duplicates(table: Table, subset: list, num_buckets,
+                          bucket_capacity, kernel_impl):
+    """Key-only hash groupby: the plan's group representatives *are* the
+    first occurrences; ranking them by key reproduces the sort backend's
+    output exactly — without a sort."""
+    plan = _run_hash_groupby_plan(table, subset, (), num_buckets,
+                                  bucket_capacity, kernel_impl)
+    _, grow, final, ngroups, cap = _canonical_group_layout(table, subset,
+                                                           plan)
+    out_cols = {n: _place_groups(table.columns[n][grow], final, cap)
+                for n in table.names}
+    return Table(columns=out_cols, nvalid=ngroups), plan.dropped
 
 
 unique = drop_duplicates
@@ -212,14 +277,55 @@ _AGGS = ("sum", "count", "mean", "min", "max")
 
 
 def groupby_aggregate(table: Table, by: Sequence[str],
-                      aggs: Mapping[str, Sequence[str] | str]) -> Table:
+                      aggs: Mapping[str, Sequence[str] | str], *,
+                      impl: str | None = None,
+                      return_overflow: bool = False,
+                      num_buckets: int | None = None,
+                      bucket_capacity: int | None = None,
+                      kernel_impl: str | None = None):
     """Paper's GroupBy followed by Aggregate.
 
     ``aggs`` maps value-column name -> aggregation(s) in
     {sum,count,mean,min,max}.  Output columns are named ``{col}_{agg}``;
     one row per distinct key, capacity preserved.
+
+    ``impl`` picks the backend (default ``kernel_backend.groupby_impl()``):
+    ``"sort"`` (lexicographic sort + segment reductions) or ``"hash"``
+    (bucketed hash-accumulate on the ``kernels/hash_groupby`` kernel — no
+    sort anywhere on the path).  Both emit the *canonical* table: one row
+    per distinct key, sorted by the ``by`` columns, counts int32, value
+    aggregates float32 — bit-identical across backends (float sum/mean
+    bit-identical whenever addition is exact, to rounding otherwise).
+    The hash backend adds static ``num_buckets`` / ``bucket_capacity``
+    sizing (auto-sized from the capacity when omitted) and ``kernel_impl``
+    (ref | pallas | pallas_interpret); rows overflowing a bucket slab are
+    dropped and counted (``return_overflow=True`` returns the count).
     """
     by = list(by)
+    aggs = {c: [ops] if isinstance(ops, str) else list(ops)
+            for c, ops in aggs.items()}
+    for ops in aggs.values():
+        for op in ops:
+            if op not in _AGGS:
+                raise ValueError(f"unknown aggregation {op!r}")
+    impl = impl or _default_groupby_impl()
+    if impl == "sort":
+        out, over = _sort_groupby(table, by, aggs), jnp.int32(0)
+    elif impl == "hash":
+        out, over = _hash_groupby(table, by, aggs, num_buckets,
+                                  bucket_capacity, kernel_impl)
+    else:
+        raise ValueError(f"unknown groupby impl {impl!r} "
+                         "(expected 'sort' or 'hash')")
+    if return_overflow:
+        return out, over
+    return out
+
+
+def _sort_groupby(table: Table, by: list,
+                  aggs: Mapping[str, list]) -> Table:
+    """Sort backend: lexicographic sort, group-boundary detection, segment
+    reductions indexed by group id."""
     ts = sort_values(table, by)
     valid = ts.valid_mask
     cap = ts.capacity
@@ -236,27 +342,23 @@ def groupby_aggregate(table: Table, by: Sequence[str],
     out_cols: dict[str, jax.Array] = {}
     for k in by:
         out_cols[k] = ts.columns[k]
-    counts = jax.ops.segment_sum(valid.astype(jnp.float32), seg,
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), seg,
                                  num_segments=cap)
+    countf = jnp.maximum(counts, 1).astype(jnp.float32)
     for col_name, ops in aggs.items():
-        if isinstance(ops, str):
-            ops = [ops]
-        col = ts.columns[col_name]
-        fcol = col.astype(jnp.float32)
+        fcol = ts.columns[col_name].astype(jnp.float32)
         for op in ops:
-            if op not in _AGGS:
-                raise ValueError(f"unknown aggregation {op!r}")
             if op == "sum":
                 v = jax.ops.segment_sum(jnp.where(valid, fcol, 0.0), seg, cap)
             elif op == "count":
                 v = counts
             elif op == "mean":
                 s = jax.ops.segment_sum(jnp.where(valid, fcol, 0.0), seg, cap)
-                v = s / jnp.maximum(counts, 1.0)
+                v = s / countf
             elif op == "min":
                 v = jax.ops.segment_min(
                     jnp.where(valid, fcol, jnp.inf), seg, cap)
-            elif op == "max":
+            else:  # max
                 v = jax.ops.segment_max(
                     jnp.where(valid, fcol, -jnp.inf), seg, cap)
             out_cols[f"{col_name}_{op}"] = v
@@ -272,15 +374,103 @@ def groupby_aggregate(table: Table, by: Sequence[str],
     return Table(columns=cols, nvalid=ngroups)
 
 
+def _run_hash_groupby_plan(table: Table, by: list, value_cols: tuple,
+                           num_buckets, bucket_capacity, kernel_impl):
+    B, C = default_hash_groupby_sizes(table.capacity, num_buckets)
+    return hash_groupby_plan(
+        tuple(table.columns[k] for k in by), table.valid_mask,
+        tuple(table.columns[c] for c in value_cols),
+        num_buckets=B, bucket_capacity=bucket_capacity or C,
+        impl=kernel_impl or _default_kernel_impl())
+
+
+def _canonical_group_layout(table: Table, by: list, plan):
+    """Map the plan's group representatives to canonical (key-sorted)
+    output rows without a sort.
+
+    Representatives are first compacted bucket-major (scatter by running
+    count), then each group's key — gathered from its first-occurrence
+    row — is ranked by a pairwise lexicographic count-smaller: group keys
+    are globally distinct (equal keys share a bucket), so the rank is a
+    bijection onto ``[0, ngroups)``.  O(capacity^2) compares, all
+    VPU-friendly broadcast work, no ``sort`` primitive.
+
+    Returns (scat, grow, final, ngroups, cap): the slab->compact scatter
+    function (for the plan's per-slot aggregates), per compacted group
+    its representative row, its canonical output slot (``cap`` = trash),
+    the group count, and the output capacity.
+    """
+    cap = table.capacity
+    rep = plan.rep.reshape(-1) > 0
+    ridx = jnp.cumsum(rep.astype(jnp.int32)) - 1   # ridx < cap: one rep/row
+    ngroups = jnp.sum(rep, dtype=jnp.int32)
+    slot = jnp.where(rep, ridx, cap)
+
+    def scat(x):
+        return jnp.zeros((cap + 1,), x.dtype).at[slot].set(x)[:cap]
+
+    grow = scat(plan.row.reshape(-1))
+    gvalid = jnp.zeros((cap + 1,), bool).at[slot].set(rep)[:cap]
+    gkeys = tuple(table.columns[k][grow] for k in by)
+    qry = tuple(k[None, :] for k in gkeys)          # candidate smaller (j)
+    ref = tuple(k[:, None] for k in gkeys)          # anchor (i)
+    less = _tuple_less(qry, ref) & gvalid[None, :]  # (G, G): key_j < key_i
+    rank = jnp.sum(less, axis=1, dtype=jnp.int32)
+    final = jnp.where(gvalid, rank, cap)
+    return scat, grow, final, ngroups, cap
+
+
+def _place_groups(x: jax.Array, final: jax.Array, cap: int) -> jax.Array:
+    """Scatter compacted group entries into their canonical slots."""
+    return jnp.zeros((cap + 1,), x.dtype).at[final].set(x)[:cap]
+
+
+def _hash_groupby(table: Table, by: list, aggs: Mapping[str, list],
+                  num_buckets, bucket_capacity, kernel_impl):
+    """Hash backend: bucketed hash-accumulate (kernels/hash_groupby)
+    instead of a sort.  The plan aggregates every distinct key inside its
+    hash bucket in one dense pass; canonical key order is recovered with
+    the pairwise rank (no sort primitive on this path)."""
+    value_cols = tuple(aggs)
+    plan = _run_hash_groupby_plan(table, by, value_cols, num_buckets,
+                                  bucket_capacity, kernel_impl)
+    scat, grow, final, ngroups, cap = _canonical_group_layout(table, by,
+                                                              plan)
+    out_cols: dict[str, jax.Array] = {
+        k: _place_groups(table.columns[k][grow], final, cap) for k in by}
+    counts = _place_groups(scat(plan.counts.reshape(-1)), final, cap)
+    countf = jnp.maximum(counts, 1).astype(jnp.float32)
+    for i, (col_name, ops) in enumerate(aggs.items()):
+        s = _place_groups(scat(plan.sums[:, i, :].reshape(-1)), final, cap)
+        for op in ops:
+            if op == "sum":
+                v = s
+            elif op == "count":
+                v = counts
+            elif op == "mean":
+                v = s / countf
+            elif op == "min":
+                v = _place_groups(scat(plan.mins[:, i, :].reshape(-1)),
+                                  final, cap)
+            else:  # max
+                v = _place_groups(scat(plan.maxs[:, i, :].reshape(-1)),
+                                  final, cap)
+            out_cols[f"{col_name}_{op}"] = v
+    return Table(columns=out_cols, nvalid=ngroups), plan.dropped
+
+
 def aggregate(table: Table, col: str, op: str) -> jax.Array:
-    """Whole-column masked reduction -> scalar (paper's Aggregate)."""
+    """Whole-column masked reduction -> scalar (paper's Aggregate).
+
+    ``count`` returns int32 (matching the groupby backends' count
+    columns); every other aggregation returns float32."""
     valid = table.valid_mask
     x = table.columns[col].astype(jnp.float32)
     n = jnp.maximum(table.nvalid.astype(jnp.float32), 1.0)
     if op == "sum":
         return jnp.sum(jnp.where(valid, x, 0.0))
     if op == "count":
-        return table.nvalid.astype(jnp.float32)
+        return table.nvalid.astype(jnp.int32)
     if op == "mean":
         return jnp.sum(jnp.where(valid, x, 0.0)) / n
     if op == "min":
@@ -554,14 +744,72 @@ def fillna(table: Table, values: Mapping[str, float]) -> Table:
 # --------------------------------------------------------------------------
 
 
-def standard_scale(table: Table, cols: Sequence[str]) -> Table:
-    """(x - mean) / std per column over valid rows (sklearn StandardScaler)."""
+def column_moments(table: Table, cols: Sequence[str],
+                   impl: str | None = None,
+                   center: Mapping[str, jax.Array] | None = None):
+    """Per-column moments over valid rows: ``({col: sum(x)},
+    {col: sum((x - center)**2)}, count)`` float32 scalars.
+
+    ``center`` maps column -> scalar (0.0 when omitted: the raw second
+    moment).  Calling twice — first for sums, then centered on the means
+    — gives the numerically stable two-pass variance (see
+    :func:`standard_scale`); the one-pass ``E[x^2] - m^2`` form
+    catastrophically cancels in float32 when ``|mean| >> std``.
+
+    ``impl=None`` uses inline masked reductions (the fast path);
+    ``"sort"`` / ``"hash"`` route the same moments through the pluggable
+    aggregation backend as a constant-key :func:`groupby_aggregate` — so
+    a preprocessing pipeline can exercise one aggregation backend end to
+    end (conformance: tests/test_groupby_backends.py).
+    """
+    center = dict(center) if center is not None else {}
+    zero = jnp.float32(0.0)
+    if impl is None:
+        valid = table.valid_mask
+        s1, sd2 = {}, {}
+        for k in cols:
+            x = table.columns[k].astype(jnp.float32)
+            d = x - center.get(k, zero)
+            s1[k] = jnp.sum(jnp.where(valid, x, 0.0))
+            sd2[k] = jnp.sum(jnp.where(valid, d * d, 0.0))
+        return s1, sd2, table.nvalid.astype(jnp.float32)
+    cap = table.capacity
+    aug = {"__k": jnp.zeros((cap,), jnp.int32)}
+    aggs: dict[str, list] = {}
+    for k in cols:
+        x = table.columns[k].astype(jnp.float32)
+        d = x - center.get(k, zero)
+        aug[k] = x
+        aug[f"__sq_{k}"] = d * d
+        aggs[k] = ["sum"]
+        aggs[f"__sq_{k}"] = ["sum"]
+    # constant key -> a single group in one bucket: the bucket slab must
+    # hold every row, so size it to the full capacity explicitly
+    g = groupby_aggregate(Table(columns=aug, nvalid=table.nvalid),
+                          ["__k"], aggs, impl=impl, num_buckets=8,
+                          bucket_capacity=cap)
+    nz = table.nvalid > 0
+    s1 = {k: jnp.where(nz, g.columns[f"{k}_sum"][0], 0.0) for k in cols}
+    sd2 = {k: jnp.where(nz, g.columns[f"__sq_{k}_sum"][0], 0.0)
+           for k in cols}
+    return s1, sd2, table.nvalid.astype(jnp.float32)
+
+
+def standard_scale(table: Table, cols: Sequence[str],
+                   impl: str | None = None) -> Table:
+    """(x - mean) / std per column over valid rows (sklearn StandardScaler).
+
+    Two-pass: mean first, then the variance of deviations about it —
+    exact even when ``|mean| >> std``.  ``impl`` selects the moment
+    computation (see :func:`column_moments`); the default inline path
+    and both aggregation backends agree to float addition-order
+    rounding."""
     out = dict(table.columns)
-    valid = table.valid_mask
-    n = jnp.maximum(table.nvalid.astype(jnp.float32), 1.0)
+    s1, _, n = column_moments(table, cols, impl=impl)
+    n = jnp.maximum(n, 1.0)
+    means = {k: s1[k] / n for k in cols}
+    _, sd2, _ = column_moments(table, cols, impl=impl, center=means)
     for k in cols:
         x = out[k].astype(jnp.float32)
-        m = jnp.sum(jnp.where(valid, x, 0.0)) / n
-        v = jnp.sum(jnp.where(valid, (x - m) ** 2, 0.0)) / n
-        out[k] = (x - m) / jnp.sqrt(v + 1e-12)
+        out[k] = (x - means[k]) / jnp.sqrt(sd2[k] / n + 1e-12)
     return Table(columns=out, nvalid=table.nvalid)

@@ -1,5 +1,5 @@
 """Pallas TPU kernels: each subpackage has kernel.py (pl.pallas_call +
 BlockSpec), ops.py (jit'd wrapper + backend dispatch), ref.py (pure-jnp
 oracle used for interpret-mode validation)."""
-from . import (flash_attention, hash_join, hash_partition,  # noqa: F401
-               mamba_scan)
+from . import (flash_attention, hash_groupby, hash_join,  # noqa: F401
+               hash_partition, mamba_scan)

@@ -1,0 +1,109 @@
+"""Shared bucketed-slab machinery for the hash table kernels.
+
+``hash_join`` and ``hash_groupby`` both start the same way: rows are
+scattered into per-bucket *slabs* (static ``num_buckets x slab_cap``
+layouts) keyed by a murmur-mixed hash of the key bit-planes, with stable
+within-bucket order equal to original row order.  That grouping — key
+bit-plane extraction, bucket-id hashing, stable within-bucket ranks, and
+the slot scatter with overflow counting — lives here so every bucketed
+kernel package shares one implementation.
+
+Semantics contract (relied on by the kernels' bit-identicality promise):
+
+* equal keys always land in the same bucket (the hash sees only the key
+  bit-planes, with ``-0.0`` floats normalized to ``+0.0``);
+* slot order within a bucket is original row order (stable ranks), so
+  per-bucket scans see rows in table order;
+* a bucket holds at most ``slab_cap`` rows — overflowing rows are dropped
+  and *counted*, never silently lost (callers size capacities so the
+  counter stays zero).
+"""
+import jax
+import jax.numpy as jnp
+
+from .hash_partition import radix_histogram_ranks
+
+# the radix ref/kernel materializes an (n, P) one-hot; past ~512 buckets
+# fall back to a sort-based ranking (a TPU build would multi-pass
+# instead).  Auto-sizing that promises a sort-free path must stay at or
+# below this bucket count.
+MAX_RADIX_BUCKETS = 512
+
+# up to this table capacity, default slab sizing uses full-capacity slabs:
+# every key distribution (including all-equal keys) fits with zero
+# overflow, and the per-bucket match matrix stays small enough for VMEM
+# (512*512*4 B = 1 MiB << ~16 MiB/core).
+EXACT_SLAB_CAP = 512
+
+
+def key_bits(col: jnp.ndarray) -> jnp.ndarray:
+    """Key column -> int32 bit-plane with exact equality semantics."""
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        col = col.astype(jnp.float32)
+        col = jnp.where(col == 0.0, jnp.zeros_like(col), col)  # -0.0 == 0.0
+        return jax.lax.bitcast_convert_type(col, jnp.int32)
+    return col.astype(jnp.int32)
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 over uint32 (same family as core.partition)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bucket_ids(bits: tuple, num_buckets: int) -> jnp.ndarray:
+    """Combined bucket id over key bit-planes (equal keys -> equal bucket)."""
+    h = jnp.full(bits[0].shape, jnp.uint32(0x9E3779B9))
+    for b in bits:
+        u = jax.lax.bitcast_convert_type(b, jnp.uint32)
+        h = _mix32(h ^ (u + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2)))
+    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+
+
+def bucket_ranks(bid: jnp.ndarray, num_buckets: int, impl: str):
+    """(hist (P,), stable within-bucket ranks (n,)) for P = num_buckets."""
+    if num_buckets <= MAX_RADIX_BUCKETS:
+        return radix_histogram_ranks(bid, num_buckets, impl=impl)
+    hist = jnp.zeros((num_buckets,), jnp.int32).at[bid].add(1)
+    order = jnp.argsort(bid, stable=True)
+    sorted_bid = bid[order]
+    n = bid.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    boundary = (iota == 0) | (sorted_bid != jnp.roll(sorted_bid, 1))
+    start = jax.lax.associative_scan(jnp.maximum,
+                                     jnp.where(boundary, iota, 0))
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(iota - start)
+    return hist, ranks
+
+
+def group_to_slabs(bits: tuple, valid: jnp.ndarray, num_buckets: int,
+                   slab_cap: int, impl: str, payload: tuple = ()):
+    """Scatter rows into (num_buckets * slab_cap) bucket-grouped slots.
+
+    Returns ``(slab_bits (K, B*cap), occ (B*cap,), row (B*cap,),
+    payload_slabs, dropped)`` where ``payload_slabs`` carries each extra
+    ``payload`` column scattered with the same slot mapping (the
+    hash-groupby value columns).  Slot order within a bucket is original
+    row order (stable ranks).
+    """
+    cap = valid.shape[0]
+    bid = jnp.where(valid, bucket_ids(bits, num_buckets), num_buckets)
+    hist, ranks = bucket_ranks(bid, num_buckets + 1, impl)
+    ok = valid & (ranks < slab_cap) & (bid < num_buckets)
+    nslots = num_buckets * slab_cap
+    slot = jnp.where(ok, bid * slab_cap + ranks, nslots)
+
+    def scat(col):
+        return jnp.zeros((nslots + 1,), col.dtype).at[slot].set(col)[:nslots]
+
+    slab_bits = jnp.stack([scat(b) for b in bits])
+    occ = scat(ok.astype(jnp.int32))
+    row = scat(jnp.arange(cap, dtype=jnp.int32))
+    payload_slabs = tuple(scat(p) for p in payload)
+    dropped = jnp.sum(jnp.maximum(hist[:num_buckets] - slab_cap, 0),
+                      dtype=jnp.int32)
+    return slab_bits, occ, row, payload_slabs, dropped

@@ -1,0 +1,13 @@
+"""jax API-drift shims shared by the kernel packages.
+
+jax renamed the Pallas TPU compiler-params dataclass — newer releases
+expose ``pltpu.CompilerParams``, the pinned 0.4.x line only the older
+``pltpu.TPUCompilerParams``.  Resolve whichever exists once, here (the
+same shim idea as ``core/context.py``'s shard_map import).  Only the
+non-interpret TPU path ever instantiates it, so interpret-mode CI cannot
+catch a bad name — keep all kernels on this alias.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ..compat import TPUCompilerParams
 
 NEG_INF = -1e30
 
@@ -89,7 +91,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
                              bq=bq, bk=bk, skv=Skv, sq=Sq)
     kwargs = {}
     if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+        kwargs["compiler_params"] = TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"))
     return pl.pallas_call(

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the bucketed hash-accumulate groupby kernel.
+
+Rows arrive already *bucket-grouped* (ops.py does the grouping with the
+shared ``kernels.bucketing`` slab machinery): for each of ``B`` buckets
+there is a slab of ``C`` slots, each slot holding the row's key bit-planes
+(``K`` int32 planes per key), an occupancy flag, and ``V`` float32 value
+columns.  Equal keys always share a bucket, so each bucket can aggregate
+its own distinct keys independently — no sort, one dense pass.
+
+Per bucket the accumulate computes, for every slot ``i``:
+
+* ``rep``    — ``(B, C)`` int32 1 iff slot ``i`` is *occupied* and is the
+  first slot in its bucket with its key (the group representative; slot
+  order is original row order, so the representative is the key's first
+  occurrence in the table);
+* ``counts`` — ``(B, C)`` int32 number of slots with slot ``i``'s key;
+* ``sums`` / ``mins`` / ``maxs`` — ``(B, V, C)`` float32 aggregates of
+  each value column over the slots sharing slot ``i``'s key.
+
+A pair of slots shares a group iff *all* key bit-planes are equal and both
+slots are occupied.  Only representative slots' outputs are consumed;
+the rest are computed dense (the same broadcast-compare idiom as the
+``hash_join`` probe) and masked by the caller.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def bucket_accumulate_ref(kbits: jnp.ndarray, occ: jnp.ndarray,
+                          vals: jnp.ndarray):
+    """kbits (B, K, C) int32, occ (B, C) int32 0/1, vals (B, V, C) f32 ->
+    (rep (B, C) int32, counts (B, C) int32, sums/mins/maxs (B, V, C))."""
+    eq = (occ[:, :, None] > 0) & (occ[:, None, :] > 0)       # (B, C, C)
+    num_keys = kbits.shape[1]
+    for k in range(num_keys):
+        eq = eq & (kbits[:, k, :, None] == kbits[:, k, None, :])
+    m = eq.astype(jnp.int32)
+    counts = jnp.sum(m, axis=2)
+    cap = occ.shape[1]
+    earlier = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1) \
+        < jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0)  # j < i
+    rep = ((occ > 0)
+           & (jnp.sum(m * earlier[None].astype(jnp.int32), axis=2) == 0))
+    x = vals[:, :, None, :]                                   # (B, V, 1, C)
+    e = eq[:, None, :, :]                                     # (B, 1, C, C)
+    sums = jnp.sum(jnp.where(e, x, 0.0), axis=3)
+    mins = jnp.min(jnp.where(e, x, jnp.inf), axis=3)
+    maxs = jnp.max(jnp.where(e, x, -jnp.inf), axis=3)
+    return rep.astype(jnp.int32), counts, sums, mins, maxs

@@ -24,7 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ..compat import TPUCompilerParams
 
 
 def _kernel(pbits_ref, pocc_ref, bbits_ref, bocc_ref,
@@ -51,7 +53,7 @@ def bucket_probe_buckets(pbits: jnp.ndarray, pocc: jnp.ndarray,
     kern = functools.partial(_kernel, num_keys=num_keys)
     kwargs = {}
     if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+        kwargs["compiler_params"] = TPUCompilerParams(
             dimension_semantics=("parallel",))
     return pl.pallas_call(
         kern,

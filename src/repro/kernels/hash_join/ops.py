@@ -26,81 +26,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..hash_partition import radix_histogram_ranks
+from ..bucketing import (EXACT_SLAB_CAP, bucket_ids,  # noqa: F401
+                         group_to_slabs, key_bits)
 from .kernel import bucket_probe_buckets
 from .ref import bucket_probe_ref
-
-# the radix ref/kernel materializes an (n, P) one-hot; past ~512 buckets
-# fall back to a sort-based ranking (a TPU build would multi-pass instead)
-_MAX_RADIX_BUCKETS = 512
-
-
-def key_bits(col: jnp.ndarray) -> jnp.ndarray:
-    """Key column -> int32 bit-plane with exact equality semantics."""
-    if jnp.issubdtype(col.dtype, jnp.floating):
-        col = col.astype(jnp.float32)
-        col = jnp.where(col == 0.0, jnp.zeros_like(col), col)  # -0.0 == 0.0
-        return jax.lax.bitcast_convert_type(col, jnp.int32)
-    return col.astype(jnp.int32)
-
-
-def _mix32(x: jnp.ndarray) -> jnp.ndarray:
-    """murmur3 fmix32 over uint32 (same family as core.partition)."""
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x85EBCA6B)
-    x = x ^ (x >> 13)
-    x = x * jnp.uint32(0xC2B2AE35)
-    x = x ^ (x >> 16)
-    return x
-
-
-def bucket_ids(bits: tuple, num_buckets: int) -> jnp.ndarray:
-    """Combined bucket id over key bit-planes (equal keys -> equal bucket)."""
-    h = jnp.full(bits[0].shape, jnp.uint32(0x9E3779B9))
-    for b in bits:
-        u = jax.lax.bitcast_convert_type(b, jnp.uint32)
-        h = _mix32(h ^ (u + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2)))
-    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
-
-
-def _bucket_ranks(bid: jnp.ndarray, num_buckets: int, impl: str):
-    """(hist (P,), stable within-bucket ranks (n,)) for P = num_buckets."""
-    if num_buckets <= _MAX_RADIX_BUCKETS:
-        return radix_histogram_ranks(bid, num_buckets, impl=impl)
-    hist = jnp.zeros((num_buckets,), jnp.int32).at[bid].add(1)
-    order = jnp.argsort(bid, stable=True)
-    sorted_bid = bid[order]
-    n = bid.shape[0]
-    iota = jnp.arange(n, dtype=jnp.int32)
-    boundary = (iota == 0) | (sorted_bid != jnp.roll(sorted_bid, 1))
-    start = jax.lax.associative_scan(jnp.maximum,
-                                     jnp.where(boundary, iota, 0))
-    ranks = jnp.zeros((n,), jnp.int32).at[order].set(iota - start)
-    return hist, ranks
 
 
 def _group(bits: tuple, valid: jnp.ndarray, num_buckets: int,
            slab_cap: int, impl: str):
-    """Scatter rows into (num_buckets * slab_cap) bucket-grouped slots.
-
-    Returns (slab_bits (K, B*cap), occ (B*cap,), row (B*cap,), dropped).
-    Slot order within a bucket is original row order (stable ranks).
-    """
-    cap = valid.shape[0]
-    bid = jnp.where(valid, bucket_ids(bits, num_buckets), num_buckets)
-    hist, ranks = _bucket_ranks(bid, num_buckets + 1, impl)
-    ok = valid & (ranks < slab_cap) & (bid < num_buckets)
-    nslots = num_buckets * slab_cap
-    slot = jnp.where(ok, bid * slab_cap + ranks, nslots)
-
-    def scat(col):
-        return jnp.zeros((nslots + 1,), col.dtype).at[slot].set(col)[:nslots]
-
-    slab_bits = jnp.stack([scat(b) for b in bits])
-    occ = scat(ok.astype(jnp.int32))
-    row = scat(jnp.arange(cap, dtype=jnp.int32))
-    dropped = jnp.sum(jnp.maximum(hist[:num_buckets] - slab_cap, 0),
-                      dtype=jnp.int32)
+    """Bucket-grouped slabs (see kernels.bucketing.group_to_slabs)."""
+    slab_bits, occ, row, _, dropped = group_to_slabs(
+        bits, valid, num_buckets, slab_cap, impl)
     return slab_bits, occ, row, dropped
 
 
@@ -179,15 +115,26 @@ def workload_hash_join_sizes(keys_per_shard: int, slab: int = 256) -> dict:
 
 def default_hash_join_sizes(left_capacity: int, right_capacity: int,
                             num_buckets: int | None = None):
-    """(num_buckets, bucket_capacity, probe_capacity) heuristics: ~16 build
-    rows per bucket on average with 4x headroom per slab; a caller-chosen
-    ``num_buckets`` keeps the slab capacities consistent with *that* bucket
-    count.  Size explicitly for skewed key distributions (the capacities
-    are worst-case *per bucket*, so heavy duplication needs deeper, fewer
-    buckets)."""
+    """(num_buckets, bucket_capacity, probe_capacity) heuristics.
+
+    Small tables (both capacities <= ``bucketing.EXACT_SLAB_CAP``) get
+    full-capacity slabs: every key distribution — including all-equal
+    keys — fits with zero overflow, so the env-default hash backend is
+    exact wherever the sort-merge backend is.  Larger tables get ~16
+    build rows per bucket on average with 4x headroom per slab; a
+    caller-chosen ``num_buckets`` keeps the slab capacities consistent
+    with *that* bucket count.  Size explicitly for skewed large-table
+    key distributions (the capacities are worst-case *per bucket*, so
+    heavy duplication needs deeper, fewer buckets)."""
+    small = max(left_capacity, right_capacity) <= EXACT_SLAB_CAP
     if num_buckets is None:
-        target = max(1, right_capacity // 16)
-        num_buckets = 1 << min(16, max(3, (target - 1).bit_length()))
+        if small:
+            num_buckets = 8
+        else:
+            target = max(1, right_capacity // 16)
+            num_buckets = 1 << min(16, max(3, (target - 1).bit_length()))
+    if small:
+        return num_buckets, max(8, right_capacity), max(8, left_capacity)
     chain = max(8, -(-right_capacity // num_buckets) * 4)
     probe = max(8, -(-left_capacity // num_buckets) * 4)
     return num_buckets, chain, probe

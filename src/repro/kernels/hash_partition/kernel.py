@@ -21,7 +21,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ..compat import TPUCompilerParams
 
 
 def _kernel(pid_ref, hist_ref, rank_ref, *, num_partitions: int):
@@ -42,7 +44,7 @@ def radix_histogram_ranks_tiles(pid_tiles: jnp.ndarray, num_partitions: int,
     kern = functools.partial(_kernel, num_partitions=num_partitions)
     kwargs = {}
     if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+        kwargs["compiler_params"] = TPUCompilerParams(
             dimension_semantics=("parallel",))
     return pl.pallas_call(
         kern,

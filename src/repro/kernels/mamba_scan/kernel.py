@@ -17,7 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ..compat import TPUCompilerParams
 
 
 def _kernel(x_ref, d_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_ref, *,
@@ -58,7 +60,7 @@ def selective_scan_pallas(x, delta, A, Bm, Cm, D, *, be: int = 256,
     kern = functools.partial(_kernel, chunk=chunk)
     kwargs = {}
     if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+        kwargs["compiler_params"] = TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     y = pl.pallas_call(
         kern,

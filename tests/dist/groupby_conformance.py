@@ -1,0 +1,107 @@
+"""Subprocess worker for tests/test_groupby_backends.py: distributed
+groupby/unique/standard-scale conformance at a given world size.
+
+Usage: XLA_FLAGS=...device_count=W python groupby_conformance.py W
+
+For each key distribution, runs dist_groupby and dist_unique with BOTH
+local backends under one shard_map and checks (a) the backends are
+bit-identical (the shuffle is backend-independent, and per shard both
+emit the canonical key-sorted table), (b) both match the pandas-semantics
+numpy oracle as multisets, and (c) dist_standard_scale agrees across its
+moment backends.  Value columns are integer-valued floats so sums are
+exact in any addition order.  Prints ``GROUPBY CONFORMANCE PASSED`` on
+success.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from oracles import (as_sets, np_drop_duplicates,  # noqa: E402
+                     np_groupby_aggregate, np_standard_scale)
+
+AGGS = {"v": ["sum", "count", "mean", "min", "max"]}
+
+
+def distributions(rng, rows):
+    return {
+        "uniform": rng.integers(0, 12, rows).astype(np.int32),
+        "skewed": np.where(rng.random(rows) < 0.6, 3,
+                           rng.integers(0, 40, rows)).astype(np.int32),
+        "allequal": np.full(rows, 7, np.int32),
+    }
+
+
+def main():
+    world = int(sys.argv[1])
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import dist_ops as D
+    from repro.core.context import make_context
+
+    dev = np.array(jax.devices()[:world])
+    ctx = make_context(Mesh(dev, ("data",)))
+    rng = np.random.default_rng(world)
+    rows = 96
+    cap = (rows // world) * 4
+    # every key's rows land on ONE shard and a shard holds <= `rows`
+    # valid rows, so bucket_capacity=rows is distribution-proof
+    sizes = {"num_buckets": 8, "bucket_capacity": rows}
+    for name, keys in distributions(rng, rows).items():
+        data = {"k": keys,
+                "v": rng.integers(-100, 100, rows).astype(np.float32)}
+        got = {}
+        for impl in ("sort", "hash"):
+            gt = D.distribute_table(ctx, data, capacity_per_shard=cap)
+            pipe = D.DistributedPipeline(
+                ctx, lambda c, a, impl=impl: D.dist_groupby(
+                    c, a, ["k"], AGGS, overcommit=4.0, local_impl=impl,
+                    groupby_sizes=(sizes if impl == "hash" else None)))
+            out, dropped = pipe(gt)
+            assert int(np.max(np.asarray(dropped))) == 0, (name, impl)
+            got[impl] = D.collect_table(ctx, out)
+        for c in got["sort"]:
+            np.testing.assert_array_equal(got["sort"][c], got["hash"][c],
+                                          err_msg=f"{name}/{c}")
+        want = np_groupby_aggregate(data, ["k"], AGGS)
+        assert as_sets(got["hash"]) == as_sets(
+            {c: v.astype(np.float64) for c, v in want.items()}), name
+        print(f"groupby {name}: ok ({len(want['k'])} groups)", flush=True)
+
+        got = {}
+        for impl in ("sort", "hash"):
+            gt = D.distribute_table(ctx, data, capacity_per_shard=cap)
+            pipe = D.DistributedPipeline(
+                ctx, lambda c, a, impl=impl: D.dist_unique(
+                    c, a, ["k"], overcommit=4.0, local_impl=impl,
+                    groupby_sizes=(sizes if impl == "hash" else None)))
+            out, dropped = pipe(gt)
+            assert int(np.max(np.asarray(dropped))) == 0, (name, impl)
+            got[impl] = D.collect_table(ctx, out)
+        for c in got["sort"]:
+            np.testing.assert_array_equal(got["sort"][c], got["hash"][c],
+                                          err_msg=f"unique {name}/{c}")
+        assert sorted(got["hash"]["k"]) == sorted(
+            np_drop_duplicates(data, ["k"])["k"]), name
+        print(f"unique {name}: ok", flush=True)
+
+    data = {"k": rng.integers(0, 9, rows).astype(np.int32),
+            "x": rng.normal(size=rows).astype(np.float32)}
+    want = np_standard_scale(data, ["x"])
+    for impl in (None, "sort", "hash"):
+        gt = D.distribute_table(ctx, data, capacity_per_shard=cap)
+        pipe = D.DistributedPipeline(
+            ctx, lambda c, a, impl=impl: D.dist_standard_scale(
+                c, a, ["x"], local_impl=impl))
+        out = pipe(gt)
+        got = D.collect_table(ctx, out)
+        np.testing.assert_allclose(got["x"], want["x"], rtol=1e-4,
+                                   atol=1e-4, err_msg=str(impl))
+    print("standard_scale: ok", flush=True)
+    print("GROUPBY CONFORMANCE PASSED")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,22 @@
-"""Shared numpy join oracles for the conformance suites.
+"""Shared "pandas" oracles for the operator conformance suites.
 
 Imported both by in-process pytest modules (tests/ is on sys.path via the
 conftest mechanism) and by the tests/dist/*.py subprocess workers (which
-add this directory to sys.path explicitly).  numpy-only: subprocesses run
+add this directory to sys.path explicitly).  The aggregation-family
+oracles (`np_groupby_aggregate`, `np_drop_duplicates`,
+`np_standard_scale`) implement *pandas semantics* — `df.groupby(by,
+sort=True).agg(...)`, `df.drop_duplicates(subset)` (keep-first) sorted by
+key, population-std `StandardScaler` — and run on real pandas whenever it
+is importable, falling back to equivalent numpy when it is not (this
+container has no pandas; CI may).  numpy-only otherwise: subprocesses run
 without pytest.
 """
 import numpy as np
+
+try:
+    import pandas as _pd
+except ImportError:          # not installed in the CPU container
+    _pd = None
 
 
 def np_join(left: dict, right: dict, how: str) -> dict:
@@ -27,6 +38,85 @@ def np_join(left: dict, right: dict, how: str) -> dict:
         out["lv"].append(left["lv"][i])
         out["rv"].append(right["rv"][j] if j is not None else np.nan)
     return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _normalize_aggs(aggs: dict) -> dict:
+    return {c: [ops] if isinstance(ops, str) else list(ops)
+            for c, ops in aggs.items()}
+
+
+def np_groupby_aggregate(data: dict, by, aggs: dict) -> dict:
+    """GroupBy+Aggregate oracle with pandas semantics: one row per
+    distinct key, rows sorted by the ``by`` columns, output columns named
+    ``{col}_{agg}`` (count int32, other aggregates float64 — cast before
+    exact compares)."""
+    by = list(by)
+    aggs = _normalize_aggs(aggs)
+    if _pd is not None:
+        df = _pd.DataFrame({k: np.asarray(v) for k, v in data.items()})
+        g = df.groupby(by, sort=True)
+        keys = g.size().reset_index()
+        out = {k: keys[k].to_numpy() for k in by}
+        res = g.agg({c: ops for c, ops in aggs.items()})
+        for c, ops in aggs.items():
+            for op in ops:
+                v = res[(c, op)].to_numpy()
+                out[f"{c}_{op}"] = (v.astype(np.int32) if op == "count"
+                                    else v.astype(np.float64))
+        return out
+    keys = list(zip(*[np.asarray(data[k]).tolist() for k in by])) \
+        if len(np.asarray(data[by[0]])) else []
+    uniq = sorted(set(keys))
+    out = {}
+    for i, k in enumerate(by):
+        out[k] = np.asarray([u[i] for u in uniq],
+                            dtype=np.asarray(data[k]).dtype)
+    members = {u: [i for i, kk in enumerate(keys) if kk == u]
+               for u in uniq}
+    for c, ops in aggs.items():
+        vals = np.asarray(data[c], dtype=np.float64)
+        for op in ops:
+            res = []
+            for u in uniq:
+                sub = vals[members[u]]
+                res.append({"sum": sub.sum, "count": lambda s=sub: len(s),
+                            "mean": sub.mean, "min": sub.min,
+                            "max": sub.max}[op]())
+            out[f"{c}_{op}"] = (np.asarray(res, np.int32) if op == "count"
+                                else np.asarray(res, np.float64))
+    return out
+
+
+def np_drop_duplicates(data: dict, subset) -> dict:
+    """Unique oracle with pandas semantics: ``drop_duplicates(subset)``
+    (keep the first occurrence's full row) then sorted by the subset key
+    columns — the engine's canonical output order."""
+    subset = list(subset)
+    if _pd is not None:
+        df = _pd.DataFrame({k: np.asarray(v) for k, v in data.items()})
+        df = df.drop_duplicates(subset=subset).sort_values(subset,
+                                                           kind="stable")
+        return {k: df[k].to_numpy() for k in data}
+    keys = list(zip(*[np.asarray(data[k]).tolist() for k in subset])) \
+        if len(np.asarray(data[subset[0]])) else []
+    first: dict = {}
+    for i, k in enumerate(keys):
+        first.setdefault(k, i)
+    order = [first[k] for k in sorted(first)]
+    return {c: np.asarray(v)[order] for c, v in data.items()}
+
+
+def np_standard_scale(data: dict, cols) -> dict:
+    """StandardScaler oracle: (x - mean) / sqrt(var + 1e-12) per column,
+    population variance, float64 accumulation (sklearn/pandas
+    semantics)."""
+    out = {c: np.asarray(v) for c, v in data.items()}
+    for c in cols:
+        x = out[c].astype(np.float64)
+        m = x.mean() if len(x) else 0.0
+        v = x.var() if len(x) else 0.0
+        out[c] = (x - m) / np.sqrt(v + 1e-12)
+    return out
 
 
 def as_sets(data: dict, cols=None):

@@ -148,6 +148,7 @@ def test_groupby_sum_mean_count(rng):
         np.testing.assert_allclose(o["v_sum"][i], sub.sum(), rtol=1e-5)
         np.testing.assert_allclose(o["v_mean"][i], sub.mean(), rtol=1e-5)
         assert o["v_count"][i] == len(sub)
+    assert o["v_count"].dtype == np.int32    # counts are int32, not float
     assert int(out.nvalid) == len(np.unique(keys))
 
 
@@ -185,7 +186,8 @@ def test_scalar_aggregate(rng):
                       rtol=1e-5)
     assert np.isclose(float(L.aggregate(t, "v", "min")), vals.min())
     assert np.isclose(float(L.aggregate(t, "v", "max")), vals.max())
-    assert float(L.aggregate(t, "v", "count")) == 33
+    count = L.aggregate(t, "v", "count")
+    assert count.dtype == np.int32 and int(count) == 33
     assert np.isclose(float(L.aggregate(t, "v", "std")), vals.std(),
                       rtol=1e-4)
 

@@ -81,6 +81,52 @@ def test_groupby_sum_preserves_total(t):
                                atol=1e-4)
 
 
+@st.composite
+def mixed_key_tables(draw, max_rows=20):
+    """Tables with a mixed-dtype (int32, float32) key pair and an
+    integer-valued float value column (exact sums in any addition order,
+    so the groupby backends must agree bit-for-bit)."""
+    n = draw(st.integers(0, max_rows))
+    pad = draw(st.integers(0, 6))
+    ik = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    # float keys off a small exact grid; no -0.0, no NaN (out of contract)
+    fk = draw(st.lists(st.sampled_from([x * 0.5 for x in range(-4, 5)]),
+                       min_size=n, max_size=n))
+    iv = draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    return Table.from_dict(
+        {"ik": np.asarray(ik, np.int32),
+         "fk": np.asarray(fk, np.float32),
+         "v": np.asarray(iv, np.float32)},
+        capacity=max(n + pad, 1))
+
+
+@given(mixed_key_tables())
+def test_groupby_backends_bit_identical(t):
+    aggs = {"v": ["sum", "count", "mean", "min", "max"]}
+    s = L.groupby_aggregate(t, ["ik", "fk"], aggs, impl="sort")
+    h, over = L.groupby_aggregate(t, ["ik", "fk"], aggs, impl="hash",
+                                  return_overflow=True)
+    assert int(over) == 0
+    assert int(s.nvalid) == int(h.nvalid)
+    sn, hn = s.to_numpy(), h.to_numpy()
+    assert set(sn) == set(hn)
+    for c in sn:
+        assert sn[c].dtype == hn[c].dtype, c
+        np.testing.assert_array_equal(sn[c], hn[c], err_msg=c)
+    assert hn["v_count"].dtype == np.int32
+
+
+@given(mixed_key_tables())
+def test_dedup_backends_bit_identical(t):
+    s = L.drop_duplicates(t, ["ik", "fk"], impl="sort")
+    h, over = L.drop_duplicates(t, ["ik", "fk"], impl="hash",
+                                return_overflow=True)
+    assert int(over) == 0
+    sn, hn = s.to_numpy(), h.to_numpy()
+    for c in sn:
+        np.testing.assert_array_equal(sn[c], hn[c], err_msg=c)
+
+
 @given(tables(), tables())
 def test_join_row_count_is_sum_of_key_products(a, b):
     na = a.to_numpy()["k"]
