@@ -20,7 +20,11 @@ groupby            shuffle + local groupby-aggregate; the local backend is
 unique             shuffle + local drop_duplicates (under ``"hash"`` a
                    key-only hash groupby — same pluggable backend)
 sort (OrderBy)     sample-sort: local sort + splitter ``all_gather`` +
-                   range partition + ``all_to_all`` + local sort
+                   range partition + ``all_to_all`` + local sort; the
+                   local sorts are pluggable via ``local_impl`` —
+                   ``"xla"`` (``lax.sort``, default) or ``"radix"``
+                   (multi-pass LSD rank, kernels/radix_sort) — so the
+                   distributed sort runs sort-primitive-free end to end
 difference/        shuffle both sides + local set op
 intersect
 repartition        global-rank range partition + ``all_to_all``
@@ -54,9 +58,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from . import local_ops as L
 from .context import HptmtContext, shard_map
 from .kernel_backend import radix_impl
+from .kernel_backend import sort_impl as _default_sort_impl
 from .partition import hash_columns, partition_ids
 from .table import Table
 from ..kernels.hash_partition import radix_histogram_ranks
+from ..kernels.radix_sort import radix_permutation, stable_partition_perm
 
 # --------------------------------------------------------------------------
 # global <-> local adapters
@@ -160,9 +166,10 @@ def shuffle_by_pid(ctx: HptmtContext, table: Table, pid: jnp.ndarray,
         cols[name] = recv
     received = Table(columns=cols,
                      nvalid=jnp.sum(recv_valid, dtype=jnp.int32))
-    # received rows are scattered across slots -> compact to front, then
-    # truncate to out_capacity.
-    perm = jnp.argsort(jnp.logical_not(recv_valid), stable=True)
+    # received rows are scattered across slots -> compact to front (the
+    # radix engine's 1-bit pass — bit-identical to the stable boolean
+    # argsort it replaces, no sort primitive), then truncate.
+    perm = stable_partition_perm(recv_valid, impl=radix_impl())
     n_recv = jnp.sum(recv_valid, dtype=jnp.int32)
     compacted = received.gather_rows(perm[:out_capacity],
                                      jnp.minimum(n_recv, out_capacity))
@@ -304,12 +311,20 @@ def dist_intersect(ctx: HptmtContext, a: Table, b: Table,
 
 def dist_sort(ctx: HptmtContext, table: Table, by: Sequence[str],
               ascending: bool = True, n_samples: int = 32,
-              overcommit: float = 2.0):
+              overcommit: float = 2.0, local_impl: str | None = None):
     """Sample-sort: local sort, splitter all_gather, range partition,
-    all_to_all, local sort.  Globally sorted = shard order + local order."""
+    all_to_all, local sort.  Globally sorted = shard order + local order.
+
+    ``local_impl`` selects the local sort backend ('xla' | 'radix',
+    default ``kernel_backend.sort_impl()``) for the pre-shuffle and final
+    local sorts; under 'radix' the gathered splitter candidates are also
+    ranked by the radix engine, so the whole distributed sort is
+    sort-primitive-free.  Both backends return drop-in bit-identical
+    results (same splitters, same routing, same shard-local order)."""
     by = list(by)
+    impl = local_impl or _default_sort_impl()
     world = ctx.world_size
-    ts = L.sort_values(table, by, ascending=ascending)
+    ts = L.sort_values(table, by, ascending=ascending, impl=impl)
     cap = ts.capacity
     s = min(n_samples, cap)
     # evenly sample valid rows (clamp handles nvalid < s)
@@ -323,12 +338,19 @@ def dist_sort(ctx: HptmtContext, table: Table, by: Sequence[str],
         sample_keys.append(col)
     gathered = [jax.lax.all_gather(c, ctx.row_axes, tiled=True)
                 for c in sample_keys]                     # (world*s,)
-    iota = jnp.arange(world * s, dtype=jnp.int32)
-    sorted_ops = jax.lax.sort((*gathered, iota), num_keys=len(gathered),
-                              is_stable=True)
+    if impl == "radix":
+        sperm = radix_permutation(tuple(gathered),
+                                  jnp.zeros((world * s,), bool),
+                                  impl=radix_impl())
+        sorted_keys = tuple(c[sperm] for c in gathered)
+    else:
+        iota = jnp.arange(world * s, dtype=jnp.int32)
+        sorted_keys = jax.lax.sort((*gathered, iota),
+                                   num_keys=len(gathered),
+                                   is_stable=True)[:-1]
     # world-1 splitters at quantile positions
     spl_pos = (jnp.arange(1, world) * (world * s)) // world
-    splitters = tuple(op[spl_pos] for op in sorted_ops[:-1])
+    splitters = tuple(op[spl_pos] for op in sorted_keys)
     row_keys = tuple(
         jnp.where(ts.valid_mask,
                   L._sort_key(ts.columns[k], ascending),
@@ -337,7 +359,7 @@ def dist_sort(ctx: HptmtContext, table: Table, by: Sequence[str],
     pid = _rank_against_splitters(splitters, row_keys)
     slots, out_cap = default_shuffle_sizes(ctx, cap, overcommit)
     sh, dropped = shuffle_by_pid(ctx, ts, pid, slots, out_cap)
-    return L.sort_values(sh, by, ascending=ascending), dropped
+    return L.sort_values(sh, by, ascending=ascending, impl=impl), dropped
 
 
 def _rank_against_splitters(splitters: tuple, row_keys: tuple) -> jnp.ndarray:
@@ -430,7 +452,7 @@ def all_gather_table(ctx: HptmtContext, table: Table) -> Table:
         g = jax.lax.all_gather(v, ctx.row_axes, tiled=True)
         cols[k] = g
     gvalid = jax.lax.all_gather(valid, ctx.row_axes, tiled=True)
-    perm = jnp.argsort(jnp.logical_not(gvalid), stable=True)
+    perm = stable_partition_perm(gvalid, impl=radix_impl())
     out = Table(columns={k: v[perm] for k, v in cols.items()},
                 nvalid=jnp.sum(gvalid, dtype=jnp.int32))
     return out

@@ -8,6 +8,7 @@ references execute instead, and tests exercise the kernels via
   probe, hash-groupby accumulate): ``ref | pallas | pallas_interpret``;
 * ``REPRO_JOIN_IMPL``    — local join algorithm: ``sortmerge | hash``;
 * ``REPRO_GROUPBY_IMPL`` — local groupby/dedup algorithm: ``sort | hash``;
+* ``REPRO_SORT_IMPL``    — local sort/OrderBy algorithm: ``xla | radix``;
 * ``REPRO_ATTN_IMPL`` / ``REPRO_MAMBA_IMPL`` — model kernels.
 """
 import os
@@ -46,6 +47,16 @@ def groupby_impl() -> str:
     if env:
         return env
     return "sort"
+
+
+def sort_impl() -> str:
+    """Local sort/OrderBy algorithm: 'xla' (``jax.lax.sort``, default) or
+    'radix' (multi-pass LSD radix rank on ``kernels/radix_sort`` — no
+    ``sort`` primitive anywhere on the path)."""
+    env = os.environ.get("REPRO_SORT_IMPL")
+    if env:
+        return env
+    return "xla"
 
 
 def attention_impl() -> str:

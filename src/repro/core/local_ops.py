@@ -26,9 +26,22 @@ TPU adaptation notes (see DESIGN.md §2):
   - ``"hash"`` — bucketed hash-accumulate on the ``kernels/hash_groupby``
     Pallas kernel: sum/count/mean/min/max per distinct key in one pass,
     **no sort primitive anywhere on the path** (canonical key order is
-    recovered with a pairwise count-smaller rank; auto-sizing keeps the
-    bucket count within the radix ranking's sort-free range — an
-    explicit ``num_buckets`` > ``bucketing.MAX_RADIX_BUCKETS`` opts out);
+    recovered with a multi-pass radix rank over the distinct keys,
+    ``kernels/radix_sort``);
+
+* OrderBy (sort_values) itself has two backends via ``impl`` (default
+  ``kernel_backend.sort_impl()`` / ``REPRO_SORT_IMPL``):
+
+  - ``"xla"`` — one stable ``jax.lax.sort`` over (validity, keys, iota);
+  - ``"radix"`` — the ``kernels/radix_sort`` multi-pass LSD engine: a
+    chain of stable counting-sort digit passes, **no sort primitive in
+    the jaxpr** — bit-identical rows/order/dtypes either way
+    (conformance: tests/test_sort_backends.py);
+
+  ``compact()``/``select()`` (and the shuffle's receive side in
+  dist_ops) always take the engine's 1-bit fast path — a single
+  counting pass that is bit-identical to the stable boolean argsort it
+  replaces, so row compaction never sorts;
 
   both emit *canonicalized* output — one row per distinct key, sorted by
   key, counts int32 — so they are bit-identical and drop-in
@@ -48,11 +61,15 @@ from typing import Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from ..kernels import bucketing
 from ..kernels.hash_groupby import (default_hash_groupby_sizes,
                                     hash_groupby_plan)
 from ..kernels.hash_join import default_hash_join_sizes, hash_join_plan
+from ..kernels.radix_sort import (radix_permutation, radix_rank,
+                                  stable_partition_perm)
 from .kernel_backend import groupby_impl as _default_groupby_impl
 from .kernel_backend import join_impl as _default_join_impl
+from .kernel_backend import sort_impl as _default_sort_impl
 from .kernel_backend import table_kernel_impl as _default_kernel_impl
 from .table import Table, isnull_values, null_like
 
@@ -67,10 +84,17 @@ def _sentinel_max(col: jax.Array) -> jax.Array:
     return jnp.asarray(jnp.iinfo(col.dtype).max, col.dtype)
 
 
-def compact(table: Table, keep: jax.Array) -> Table:
-    """Move rows where ``keep`` holds to the front (stable); drop the rest."""
+def compact(table: Table, keep: jax.Array,
+            kernel_impl: str | None = None) -> Table:
+    """Move rows where ``keep`` holds to the front (stable); drop the rest.
+
+    Runs the radix engine's 1-bit fast path (one stable counting pass,
+    ``kernels/radix_sort``) — bit-identical to the boolean
+    ``argsort(~keep, stable=True)`` it replaces, with no sort primitive.
+    """
     keep = keep & table.valid_mask
-    perm = jnp.argsort(jnp.logical_not(keep), stable=True)
+    perm = stable_partition_perm(keep,
+                                 impl=kernel_impl or _default_kernel_impl())
     return table.gather_rows(perm, jnp.sum(keep, dtype=jnp.int32))
 
 
@@ -129,17 +153,38 @@ def _sort_key(col: jax.Array, ascending: bool) -> jax.Array:
 
 
 def sort_values(table: Table, by: Sequence[str],
-                ascending: bool | Sequence[bool] = True) -> Table:
-    """Paper's OrderBy: stable multi-key sort; padding rows stay at the end."""
+                ascending: bool | Sequence[bool] = True, *,
+                impl: str | None = None,
+                kernel_impl: str | None = None) -> Table:
+    """Paper's OrderBy: stable multi-key sort; padding rows stay at the end.
+
+    ``impl`` picks the backend (default ``kernel_backend.sort_impl()``):
+    ``"xla"`` (one stable ``jax.lax.sort``) or ``"radix"`` (multi-pass LSD
+    radix rank on the ``kernels/radix_sort`` engine — no ``sort``
+    primitive in the jaxpr).  Both emit *bit-identical* output — same
+    rows, same order, same dtypes, including the stable order of equal
+    keys and the padding region — so they are drop-in interchangeable
+    (conformance: tests/test_sort_backends.py).  ``kernel_impl``
+    (ref | pallas | pallas_interpret) selects the radix digit kernel.
+    """
     by = list(by)
     if isinstance(ascending, bool):
         ascending = [ascending] * len(by)
-    invalid = (~table.valid_mask).astype(jnp.int32)
+    impl = impl or _default_sort_impl()
     keys = [_sort_key(table.columns[k], a) for k, a in zip(by, ascending)]
-    iota = jnp.arange(table.capacity, dtype=jnp.int32)
-    out = jax.lax.sort((invalid, *keys, iota), num_keys=1 + len(keys),
-                       is_stable=True)
-    perm = out[-1]
+    if impl == "xla":
+        invalid = (~table.valid_mask).astype(jnp.int32)
+        iota = jnp.arange(table.capacity, dtype=jnp.int32)
+        out = jax.lax.sort((invalid, *keys, iota), num_keys=1 + len(keys),
+                           is_stable=True)
+        perm = out[-1]
+    elif impl == "radix":
+        perm = radix_permutation(
+            tuple(keys), ~table.valid_mask,
+            impl=kernel_impl or _default_kernel_impl())
+    else:
+        raise ValueError(f"unknown sort impl {impl!r} "
+                         "(expected 'xla' or 'radix')")
     return table.gather_rows(perm, table.nvalid)
 
 
@@ -259,8 +304,8 @@ def _hash_drop_duplicates(table: Table, subset: list, num_buckets,
     output exactly — without a sort."""
     plan = _run_hash_groupby_plan(table, subset, (), num_buckets,
                                   bucket_capacity, kernel_impl)
-    _, grow, final, ngroups, cap = _canonical_group_layout(table, subset,
-                                                           plan)
+    _, grow, final, ngroups, cap = _canonical_group_layout(
+        table, subset, plan, kernel_impl)
     out_cols = {n: _place_groups(table.columns[n][grow], final, cap)
                 for n in table.names}
     return Table(columns=out_cols, nvalid=ngroups), plan.dropped
@@ -374,26 +419,61 @@ def _sort_groupby(table: Table, by: list,
     return Table(columns=cols, nvalid=ngroups)
 
 
+def _planned_sizes(cols: tuple, nvalid, capacity: int, num_buckets,
+                   explicit_capacity):
+    """Distribution-proof static sizing via the two-pass bucket planner.
+
+    Above ``bucketing.EXACT_SLAB_CAP`` the uniform auto-sizing heuristic
+    can overflow on skewed keys; when the key columns are *concrete* (an
+    eager call — not traced under jit/shard_map) the planner histograms
+    the actual bucket loads host-side and sizes the slab to cover the
+    real maximum.  Returns ``(num_buckets, bucket_capacity)`` or ``None``
+    when planning is not applicable (explicit capacity, exact-slab range,
+    or traced inputs — the heuristic applies there).
+    """
+    if explicit_capacity is not None or capacity <= bucketing.EXACT_SLAB_CAP:
+        return None
+    if isinstance(nvalid, jax.core.Tracer) or any(
+            isinstance(c, jax.core.Tracer) for c in cols):
+        return None
+    n = int(nvalid)
+    B, C = bucketing.plan_bucket_sizes([c[:n] for c in cols], num_buckets)
+    # slab sizes are static args of the jitted plans: quantize the planned
+    # capacity to the next power of two so shifting key distributions
+    # retrace at most log2(capacity) times, not once per observed load
+    return B, 1 << max(3, (C - 1).bit_length())
+
+
 def _run_hash_groupby_plan(table: Table, by: list, value_cols: tuple,
                            num_buckets, bucket_capacity, kernel_impl):
-    B, C = default_hash_groupby_sizes(table.capacity, num_buckets)
+    keys = tuple(table.columns[k] for k in by)
+    planned = _planned_sizes(keys, table.nvalid, table.capacity,
+                             num_buckets, bucket_capacity)
+    if planned is not None:
+        B, C = planned
+    else:
+        B, C = default_hash_groupby_sizes(table.capacity, num_buckets)
+        C = bucket_capacity or C
     return hash_groupby_plan(
-        tuple(table.columns[k] for k in by), table.valid_mask,
+        keys, table.valid_mask,
         tuple(table.columns[c] for c in value_cols),
-        num_buckets=B, bucket_capacity=bucket_capacity or C,
+        num_buckets=B, bucket_capacity=C,
         impl=kernel_impl or _default_kernel_impl())
 
 
-def _canonical_group_layout(table: Table, by: list, plan):
+def _canonical_group_layout(table: Table, by: list, plan,
+                            kernel_impl: str | None = None):
     """Map the plan's group representatives to canonical (key-sorted)
     output rows without a sort.
 
     Representatives are first compacted bucket-major (scatter by running
     count), then each group's key — gathered from its first-occurrence
-    row — is ranked by a pairwise lexicographic count-smaller: group keys
-    are globally distinct (equal keys share a bucket), so the rank is a
-    bijection onto ``[0, ngroups)``.  O(capacity^2) compares, all
-    VPU-friendly broadcast work, no ``sort`` primitive.
+    row — is ranked by the ``kernels/radix_sort`` multi-pass radix rank:
+    group keys are globally distinct (equal keys share a bucket), so each
+    valid group's stable rank is a bijection onto ``[0, ngroups)``.
+    O(passes * capacity * 2^radix_bits) counting work — linear in the
+    capacity, replacing the earlier O(capacity^2) pairwise count-smaller
+    — and still no ``sort`` primitive.
 
     Returns (scat, grow, final, ngroups, cap): the slab->compact scatter
     function (for the plan's per-slot aggregates), per compacted group
@@ -412,10 +492,8 @@ def _canonical_group_layout(table: Table, by: list, plan):
     grow = scat(plan.row.reshape(-1))
     gvalid = jnp.zeros((cap + 1,), bool).at[slot].set(rep)[:cap]
     gkeys = tuple(table.columns[k][grow] for k in by)
-    qry = tuple(k[None, :] for k in gkeys)          # candidate smaller (j)
-    ref = tuple(k[:, None] for k in gkeys)          # anchor (i)
-    less = _tuple_less(qry, ref) & gvalid[None, :]  # (G, G): key_j < key_i
-    rank = jnp.sum(less, axis=1, dtype=jnp.int32)
+    rank = radix_rank(gkeys, ~gvalid,
+                      impl=kernel_impl or _default_kernel_impl())
     final = jnp.where(gvalid, rank, cap)
     return scat, grow, final, ngroups, cap
 
@@ -430,12 +508,12 @@ def _hash_groupby(table: Table, by: list, aggs: Mapping[str, list],
     """Hash backend: bucketed hash-accumulate (kernels/hash_groupby)
     instead of a sort.  The plan aggregates every distinct key inside its
     hash bucket in one dense pass; canonical key order is recovered with
-    the pairwise rank (no sort primitive on this path)."""
+    the multi-pass radix rank (no sort primitive on this path)."""
     value_cols = tuple(aggs)
     plan = _run_hash_groupby_plan(table, by, value_cols, num_buckets,
                                   bucket_capacity, kernel_impl)
-    scat, grow, final, ngroups, cap = _canonical_group_layout(table, by,
-                                                              plan)
+    scat, grow, final, ngroups, cap = _canonical_group_layout(
+        table, by, plan, kernel_impl)
     out_cols: dict[str, jax.Array] = {
         k: _place_groups(table.columns[k][grow], final, cap) for k in by}
     counts = _place_groups(scat(plan.counts.reshape(-1)), final, cap)
@@ -598,11 +676,20 @@ def _hash_join(left: Table, right: Table, left_on, right_on, how,
     is original-right-row order."""
     B, C, Lc = default_hash_join_sizes(left.capacity, right.capacity,
                                        num_buckets)
-    C = bucket_capacity or C
-    Lc = probe_capacity or Lc
     qkeys = tuple(left.columns[k].astype(right.columns[rk].dtype)
                   for k, rk in zip(left_on, right_on))
     rkeys = tuple(right.columns[rk] for rk in right_on)
+    # two-pass planner (concrete keys, above the exact-slab range): size
+    # the build chains / probe slabs to the real per-bucket maxima
+    big = max(left.capacity, right.capacity)
+    built = _planned_sizes(rkeys, right.nvalid, big, B, bucket_capacity)
+    if built is not None:
+        C = built[1]
+    probed = _planned_sizes(qkeys, left.nvalid, big, B, probe_capacity)
+    if probed is not None:
+        Lc = probed[1]
+    C = bucket_capacity or C
+    Lc = probe_capacity or Lc
     plan = hash_join_plan(qkeys, left.valid_mask, rkeys, right.valid_mask,
                           num_buckets=B, bucket_capacity=C,
                           probe_capacity=Lc,

@@ -18,15 +18,20 @@ Semantics contract (relied on by the kernels' bit-identicality promise):
   and *counted*, never silently lost (callers size capacities so the
   counter stays zero).
 """
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hash_partition import radix_histogram_ranks
+from .radix_sort import grouped_ranks
 
-# the radix ref/kernel materializes an (n, P) one-hot; past ~512 buckets
-# fall back to a sort-based ranking (a TPU build would multi-pass
-# instead).  Auto-sizing that promises a sort-free path must stay at or
-# below this bucket count.
+# the single-pass radix ref/kernel materializes an (n, P) one-hot; past
+# ~512 buckets switch to the multi-pass rank (kernels/radix_sort), whose
+# per-pass one-hot stays at 2^radix_bits — every bucket count is
+# sort-free.  The cap still bounds the cheaper single-pass path and the
+# per-bucket slab grids the kernels iterate over.
 MAX_RADIX_BUCKETS = 512
 
 # up to this table capacity, default slab sizing uses full-capacity slabs:
@@ -65,19 +70,16 @@ def bucket_ids(bits: tuple, num_buckets: int) -> jnp.ndarray:
 
 
 def bucket_ranks(bid: jnp.ndarray, num_buckets: int, impl: str):
-    """(hist (P,), stable within-bucket ranks (n,)) for P = num_buckets."""
+    """(hist (P,), stable within-bucket ranks (n,)) for P = num_buckets.
+
+    At most ``MAX_RADIX_BUCKETS`` buckets use the single-pass
+    ``hash_partition`` one-hot; larger counts take the multi-pass radix
+    rank (``kernels/radix_sort``) — sort-free either way, so the hash
+    backends' no-``sort``-primitive guarantee holds at any bucket count.
+    """
     if num_buckets <= MAX_RADIX_BUCKETS:
         return radix_histogram_ranks(bid, num_buckets, impl=impl)
-    hist = jnp.zeros((num_buckets,), jnp.int32).at[bid].add(1)
-    order = jnp.argsort(bid, stable=True)
-    sorted_bid = bid[order]
-    n = bid.shape[0]
-    iota = jnp.arange(n, dtype=jnp.int32)
-    boundary = (iota == 0) | (sorted_bid != jnp.roll(sorted_bid, 1))
-    start = jax.lax.associative_scan(jnp.maximum,
-                                     jnp.where(boundary, iota, 0))
-    ranks = jnp.zeros((n,), jnp.int32).at[order].set(iota - start)
-    return hist, ranks
+    return grouped_ranks(bid, num_buckets, impl=impl)
 
 
 def group_to_slabs(bits: tuple, valid: jnp.ndarray, num_buckets: int,
@@ -107,3 +109,41 @@ def group_to_slabs(bits: tuple, valid: jnp.ndarray, num_buckets: int,
     dropped = jnp.sum(jnp.maximum(hist[:num_buckets] - slab_cap, 0),
                       dtype=jnp.int32)
     return slab_bits, occ, row, payload_slabs, dropped
+
+
+def default_bucket_count(capacity: int) -> int:
+    """~16-rows-per-bucket power-of-two bucket count, capped at
+    ``MAX_RADIX_BUCKETS`` (the single-pass ranking's one-hot width)."""
+    target = max(1, capacity // 16)
+    return 1 << min(MAX_RADIX_BUCKETS.bit_length() - 1,
+                    max(3, (target - 1).bit_length()))
+
+
+def plan_bucket_sizes(key_cols, num_buckets: int | None = None, *,
+                      headroom: float = 1.0, min_capacity: int = 8):
+    """Two-pass (histogram, then size) bucket planner -> ``(num_buckets,
+    slab_capacity)`` static sizes that are *distribution-proof* for the
+    given keys.
+
+    The one-pass auto-sizing heuristics assume ~uniform key spread above
+    ``EXACT_SLAB_CAP``, so a heavily skewed key distribution can overflow
+    its hottest bucket's slab.  This planner runs **host-side on concrete
+    key columns** (valid rows only): pass 1 buckets the actual keys with
+    the same ``bucket_ids`` hash the kernels use, pass 2 sizes the slab to
+    the observed maximum bucket load (times ``headroom``, rounded up to a
+    multiple of 8 for lane alignment) — the overflow counter is then zero
+    by construction for these keys.  Callers under ``jit``/``shard_map``
+    can't plan (the keys are traced); they keep the heuristic or pass
+    explicit sizes.
+    """
+    cols = [np.asarray(c) for c in key_cols]
+    n = int(cols[0].shape[0]) if cols else 0
+    if num_buckets is None:
+        num_buckets = default_bucket_count(n)
+    if n == 0:
+        return num_buckets, min_capacity
+    bits = tuple(key_bits(jnp.asarray(c)) for c in cols)
+    bid = np.asarray(bucket_ids(bits, num_buckets))
+    load = int(np.bincount(bid, minlength=num_buckets).max())
+    cap = int(math.ceil(load * headroom))
+    return num_buckets, max(min_capacity, -(-cap // 8) * 8)

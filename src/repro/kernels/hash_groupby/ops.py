@@ -29,7 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..bucketing import (EXACT_SLAB_CAP, MAX_RADIX_BUCKETS,
+from ..bucketing import (EXACT_SLAB_CAP, default_bucket_count,
                          group_to_slabs, key_bits)
 from .kernel import bucket_accumulate_buckets
 from .ref import bucket_accumulate_ref
@@ -93,17 +93,17 @@ def default_hash_groupby_sizes(capacity: int,
     full-capacity slabs: every key distribution — including all-equal
     keys — aggregates with zero overflow, so the env-default hash backend
     is exact wherever the sort backend is.  Larger tables get ~16 rows
-    per bucket on average with 4x headroom; heavy key duplication there
-    needs explicit deeper, fewer buckets (the capacities are worst-case
-    *per bucket*).  Auto bucket counts stay at or below
-    ``bucketing.MAX_RADIX_BUCKETS`` so the grouping never takes the
-    sort-based ranking fallback — the hash path's no-sort guarantee
-    holds at every capacity (a caller-chosen larger ``num_buckets``
-    opts out of that guarantee)."""
+    per bucket on average (``bucketing.default_bucket_count``) with 4x
+    headroom — an assumption of ~uniform key spread; with *concrete*
+    (non-traced) keys the engine upgrades this to the distribution-proof
+    two-pass ``bucketing.plan_bucket_sizes`` planner, and skewed traced
+    workloads should pass explicit deeper, fewer buckets (the capacities
+    are worst-case *per bucket*).  Any bucket count is sort-free: past
+    ``bucketing.MAX_RADIX_BUCKETS`` the slab grouping switches from the
+    single-pass one-hot ranking to the multi-pass ``kernels/radix_sort``
+    rank."""
     if capacity <= EXACT_SLAB_CAP:
         return num_buckets or 8, max(8, capacity)
     if num_buckets is None:
-        target = max(1, capacity // 16)
-        num_buckets = 1 << min(MAX_RADIX_BUCKETS.bit_length() - 1,
-                               max(3, (target - 1).bit_length()))
+        num_buckets = default_bucket_count(capacity)
     return num_buckets, max(8, -(-capacity // num_buckets) * 4)

@@ -121,11 +121,14 @@ def default_hash_join_sizes(left_capacity: int, right_capacity: int,
     full-capacity slabs: every key distribution — including all-equal
     keys — fits with zero overflow, so the env-default hash backend is
     exact wherever the sort-merge backend is.  Larger tables get ~16
-    build rows per bucket on average with 4x headroom per slab; a
-    caller-chosen ``num_buckets`` keeps the slab capacities consistent
-    with *that* bucket count.  Size explicitly for skewed large-table
-    key distributions (the capacities are worst-case *per bucket*, so
-    heavy duplication needs deeper, fewer buckets)."""
+    build rows per bucket on average with 4x headroom per slab — an
+    assumption of ~uniform key spread; with *concrete* (non-traced) keys
+    the engine upgrades the slab capacities to the distribution-proof
+    two-pass ``bucketing.plan_bucket_sizes`` planner.  A caller-chosen
+    ``num_buckets`` keeps the slab capacities consistent with *that*
+    bucket count; size explicitly for skewed large-table keys under
+    ``jit`` (the capacities are worst-case *per bucket*, so heavy
+    duplication needs deeper, fewer buckets)."""
     small = max(left_capacity, right_capacity) <= EXACT_SLAB_CAP
     if num_buckets is None:
         if small:

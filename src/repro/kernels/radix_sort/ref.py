@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for one LSD radix digit pass.
+
+A stable LSD radix sort is a chain of counting-sort passes.  Each pass
+needs, for the ``radix_bits``-wide digit at bit offset ``shift`` of every
+row's *sort word* (see ``ops.sortable_word``):
+
+* ``hist``  — ``(2**radix_bits,)`` int32 row counts per digit value;
+* ``ranks`` — ``(n,)`` int32 stable rank of each row *within* its digit
+  (the i-th row carrying digit d gets rank i, in current row order).
+
+Scattering row i to ``exclusive_offset[digit[i]] + ranks[i]`` is then one
+stable counting-sort step.  Digit extraction is fused here (and in the
+Pallas kernel) so a pass reads each word exactly once: arithmetic shift
+plus mask is exact for every offset because the mask discards the
+sign-extension bits.
+"""
+import jax.numpy as jnp
+
+
+def extract_digits(words: jnp.ndarray, shift: int,
+                   radix_bits: int) -> jnp.ndarray:
+    """int32 sort words -> int32 digit in [0, 2**radix_bits)."""
+    return (words >> shift) & jnp.int32((1 << radix_bits) - 1)
+
+
+def digit_histogram_ranks_ref(words: jnp.ndarray, shift: int,
+                              radix_bits: int):
+    num_digits = 1 << radix_bits
+    d = extract_digits(words, shift, radix_bits)
+    onehot = (d[:, None] == jnp.arange(num_digits, dtype=jnp.int32)
+              [None, :]).astype(jnp.int32)
+    hist = jnp.sum(onehot, axis=0)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    ranks = jnp.sum(excl * onehot, axis=1)
+    return hist, ranks

@@ -132,18 +132,19 @@ def check_unique(ctx, rng):
     print("dist_unique ok")
 
 
-def check_sort(ctx, rng):
+def check_sort(ctx, rng, local_impl):
     data = {"k": rng.integers(0, 1000, 90).astype(np.int32),
             "v": rng.normal(size=90).astype(np.float32)}
     t = D.distribute_table(ctx, data, capacity_per_shard=40)
     pipe = D.DistributedPipeline(
-        ctx, lambda c, a: D.dist_sort(c, a, ["k"], overcommit=4.0))
+        ctx, lambda c, a: D.dist_sort(c, a, ["k"], overcommit=4.0,
+                                      local_impl=local_impl))
     out, dropped = pipe(t)
     assert int(np.max(np.asarray(dropped))) == 0
     got = D.collect_table(ctx, out)
     np.testing.assert_array_equal(got["k"], np.sort(data["k"]))
     assert as_sets(got) == as_sets(data)
-    print("dist_sort ok")
+    print(f"dist_sort[{local_impl}] ok")
 
 
 def check_repartition(ctx, rng):
@@ -173,7 +174,8 @@ def main():
     check_join_backends_agree(ctx, rng)
     check_groupby(ctx, rng)
     check_unique(ctx, rng)
-    check_sort(ctx, rng)
+    check_sort(ctx, rng, "xla")
+    check_sort(ctx, rng, "radix")
     check_repartition(ctx, rng)
     print("DIST CHECKS PASSED")
 

@@ -1,0 +1,116 @@
+"""Subprocess worker for tests/test_sort_backends.py: distributed
+sample-sort conformance at a given world size.
+
+Usage: XLA_FLAGS=...device_count=W python sort_conformance.py W
+
+For each key distribution x ascending flag, runs dist_sort with BOTH
+local sort backends under one shard_map and checks (a) the backends are
+bit-identical end to end (same splitters -> same routing -> same
+shard-local order), (b) both match the pandas-semantics numpy oracle
+*exactly* — the sample-sort is globally stable (shard order + stable
+shuffle slots + stable local sort), so even tie order must match —
+and (c) the dropped counter stays zero.  At world 4 a shard-skew
+regression runs: one empty shard + full shards at capacity, default
+overcommit, splitters must still partition with zero drops.  Prints
+``SORT CONFORMANCE PASSED`` on success.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from oracles import np_sort_values  # noqa: E402
+
+
+def distributions(rng, rows):
+    return {
+        "uniform": rng.integers(-500, 500, rows).astype(np.int32),
+        "skewed": np.where(rng.random(rows) < 0.6, 3,
+                           rng.integers(-40, 40, rows)).astype(np.int32),
+        "allequal": np.full(rows, 7, np.int32),      # ties: stability
+        "alldistinct": (rng.permutation(rows) - rows // 2)
+        .astype(np.int32),
+    }
+
+
+def run_dist_sort(ctx, D, data, cap, ascending, impl, overcommit=4.0):
+    gt = D.distribute_table(ctx, data, capacity_per_shard=cap)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a: D.dist_sort(c, a, ["k"], ascending=ascending,
+                                      overcommit=overcommit,
+                                      local_impl=impl))
+    out, dropped = pipe(gt)
+    return out, dropped
+
+
+def check_skew(ctx, D):
+    """world 4, shards (3, 3, 3, 0): three full shards (at capacity), one
+    empty.  Splitters must still partition exactly and nothing drops at
+    the DEFAULT overcommit (2.0)."""
+    # interleaved keys: each sender routes one row to each destination
+    keys = np.array([0, 3, 6, 1, 4, 7, 2, 5, 8], np.int32)
+    data = {"k": keys, "rid": np.arange(9, dtype=np.int32)}
+    gt = D.distribute_table(ctx, data, capacity_per_shard=3)
+    nv = np.asarray(gt.nvalid).reshape(-1)
+    assert list(nv) == [3, 3, 3, 0], nv          # the skewed layout
+    for impl in ("xla", "radix"):
+        pipe = D.DistributedPipeline(
+            ctx, lambda c, a, impl=impl: D.dist_sort(c, a, ["k"],
+                                                     local_impl=impl))
+        out, dropped = pipe(gt)
+        assert int(np.max(np.asarray(dropped))) == 0, impl
+        got = D.collect_table(ctx, out)
+        np.testing.assert_array_equal(got["k"], np.arange(9),
+                                      err_msg=impl)
+        np.testing.assert_array_equal(got["rid"],
+                                      np.argsort(keys, kind="stable"),
+                                      err_msg=impl)
+        # exact splitters (3, 6, sentinel): shards get 3/3/3/0 rows
+        nv = np.asarray(out.nvalid).reshape(-1)
+        assert list(nv) == [3, 3, 3, 0], (impl, nv)
+    print("shard skew: ok", flush=True)
+
+
+def main():
+    world = int(sys.argv[1])
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import dist_ops as D
+    from repro.core.context import make_context
+
+    dev = np.array(jax.devices()[:world])
+    ctx = make_context(Mesh(dev, ("data",)))
+    rng = np.random.default_rng(world)
+    rows = 96
+    cap = (rows // world) * 4       # holds the allequal single-shard pile
+    for name, keys in distributions(rng, rows).items():
+        data = {"k": keys,
+                "f": (rng.integers(-4, 5, rows) * 0.5).astype(np.float32),
+                "rid": np.arange(rows, dtype=np.int32)}  # pins tie order
+        for ascending in (True, False):
+            got = {}
+            for impl in ("xla", "radix"):
+                out, dropped = run_dist_sort(ctx, D, data, cap, ascending,
+                                             impl)
+                assert int(np.max(np.asarray(dropped))) == 0, \
+                    (name, ascending, impl)
+                got[impl] = D.collect_table(ctx, out)
+            for c in got["xla"]:
+                np.testing.assert_array_equal(
+                    got["xla"][c], got["radix"][c],
+                    err_msg=f"{name}/asc={ascending}/{c}")
+            want = np_sort_values(data, ["k"], ascending)
+            for c in want:
+                np.testing.assert_array_equal(
+                    got["radix"][c], want[c].astype(got["radix"][c].dtype),
+                    err_msg=f"{name}/asc={ascending} vs oracle {c}")
+            print(f"{name}/asc={ascending}: ok", flush=True)
+    if world == 4:
+        check_skew(ctx, D)
+    print("SORT CONFORMANCE PASSED")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

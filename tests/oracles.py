@@ -87,6 +87,28 @@ def np_groupby_aggregate(data: dict, by, aggs: dict) -> dict:
     return out
 
 
+def np_sort_values(data: dict, by, ascending=True) -> dict:
+    """OrderBy oracle with pandas semantics: ``df.sort_values(by,
+    ascending=..., kind="stable")`` — stable multi-key sort with per-key
+    ascending flags; ties keep original row order."""
+    by = list(by)
+    asc = [ascending] * len(by) if isinstance(ascending, bool) \
+        else list(ascending)
+    if _pd is not None:
+        df = _pd.DataFrame({k: np.asarray(v) for k, v in data.items()})
+        df = df.sort_values(by, ascending=asc, kind="stable")
+        return {k: df[k].to_numpy() for k in data}
+    n = len(np.asarray(data[by[0]]))
+    order = np.arange(n)
+    # successive stable sorts, least-significant key first (radix style);
+    # descending via float64 negation (exact for int32/float32 values)
+    for k, a in zip(reversed(by), reversed(asc)):
+        col = np.asarray(data[k])[order].astype(np.float64)
+        idx = np.argsort(col if a else -col, kind="stable")
+        order = order[idx]
+    return {k: np.asarray(v)[order] for k, v in data.items()}
+
+
 def np_drop_duplicates(data: dict, subset) -> dict:
     """Unique oracle with pandas semantics: ``drop_duplicates(subset)``
     (keep the first occurrence's full row) then sorted by the subset key

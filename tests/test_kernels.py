@@ -17,6 +17,11 @@ from repro.kernels.hash_partition import (partition_plan,
 from repro.kernels.hash_partition.ref import radix_histogram_ranks_ref
 from repro.kernels.mamba_scan import selective_scan
 from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels import bucketing
+from repro.kernels.radix_sort import (grouped_ranks, radix_permutation,
+                                      stable_partition_perm)
+from repro.kernels.radix_sort.kernel import digit_histogram_ranks_tiles
+from repro.kernels.radix_sort.ref import digit_histogram_ranks_ref
 
 # --------------------------------------------------------------------------
 # hash_partition radix kernel
@@ -74,6 +79,157 @@ def test_radix_ranks_are_stable():
     pid = jnp.asarray(np.array([2, 0, 2, 2, 0, 1], np.int32))
     _, ranks = radix_histogram_ranks_ref(pid, 3)
     np.testing.assert_array_equal(np.asarray(ranks), [0, 0, 1, 2, 1, 0])
+
+
+# --------------------------------------------------------------------------
+# radix_sort digit kernel + multi-pass ops
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_tiles,tile,radix_bits,shift", [
+    (1, 128, 8, 0), (3, 256, 8, 24), (2, 512, 8, 16), (4, 128, 1, 0),
+    (2, 256, 4, 28),
+])
+def test_digit_kernel_interpret_matches_ref(n_tiles, tile, radix_bits,
+                                            shift):
+    """Fused digit extraction: interpret-mode kernel == pure-jnp ref per
+    tile, over negative words too (arithmetic shift + mask is exact)."""
+    rng = np.random.default_rng(n_tiles * 7 + tile + shift)
+    words = rng.integers(-2 ** 31, 2 ** 31, n_tiles * tile,
+                         dtype=np.int64).astype(np.int32)
+    tiles = jnp.asarray(words.reshape(n_tiles, tile))
+    h_k, r_k = digit_histogram_ranks_tiles(tiles, shift, radix_bits,
+                                           interpret=True)
+    for t in range(n_tiles):
+        h_ref, r_ref = digit_histogram_ranks_ref(tiles[t], shift,
+                                                 radix_bits)
+        np.testing.assert_array_equal(np.asarray(h_k)[t],
+                                      np.asarray(h_ref))
+        np.testing.assert_array_equal(np.asarray(r_k)[t],
+                                      np.asarray(r_ref))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_radix_permutation_matches_lax_sort(impl):
+    """The multi-pass engine is bit-identical to a stable lax.sort over
+    (validity, keys, iota) — int32 + float32 keys, with a small tile so
+    the interpret leg exercises the real kernel + cross-tile scan."""
+    rng = np.random.default_rng(0)
+    for n, nval in ((7, 7), (64, 50), (130, 128), (97, 0)):
+        ik = jnp.asarray(rng.integers(-99, 99, n).astype(np.int32))
+        fk = jnp.asarray((rng.integers(-6, 7, n) * 0.25)
+                         .astype(np.float32))
+        invalid = jnp.arange(n) >= nval
+        iota = jnp.arange(n, dtype=jnp.int32)
+        want = jax.lax.sort((invalid.astype(jnp.int32), ik, fk, iota),
+                            num_keys=3, is_stable=True)[-1]
+        got = radix_permutation((ik, fk), invalid, impl=impl, tile=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{impl} n={n}")
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_stable_partition_perm_is_boolean_argsort(impl):
+    rng = np.random.default_rng(3)
+    for n in (5, 64, 200):
+        keep = jnp.asarray(rng.random(n) < 0.4)
+        want = jnp.argsort(jnp.logical_not(keep), stable=True)
+        got = stable_partition_perm(keep, impl=impl, tile=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("parts", [3, 512, 2000])
+def test_grouped_ranks_matches_single_pass_ref(parts):
+    """Any partition count — including past MAX_RADIX_BUCKETS where the
+    slab grouping uses this instead of the (n, P) one-hot."""
+    rng = np.random.default_rng(parts)
+    pid = jnp.asarray(rng.integers(0, parts, 700).astype(np.int32))
+    h_ref, r_ref = radix_histogram_ranks_ref(pid, parts)
+    for impl in ("ref", "pallas_interpret"):
+        h, r = grouped_ranks(pid, parts, impl=impl, tile=256)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(h_ref))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+
+
+# --------------------------------------------------------------------------
+# bucketing: two-pass (histogram, then size) bucket planner
+# --------------------------------------------------------------------------
+
+
+def _skewed_keys(rng, n, heavy=0.6):
+    return np.where(rng.random(n) < heavy, 3,
+                    rng.integers(0, 40, n)).astype(np.int32)
+
+
+def test_plan_bucket_sizes_covers_actual_max_load():
+    rng = np.random.default_rng(0)
+    keys = _skewed_keys(rng, 600)
+    B, C = bucketing.plan_bucket_sizes([keys])
+    heavy = int((keys == 3).sum())
+    assert C >= heavy                       # the hot bucket fits entirely
+    assert C % 8 == 0 and B == bucketing.default_bucket_count(600)
+    # explicit bucket count is respected
+    B2, C2 = bucketing.plan_bucket_sizes([keys], num_buckets=16)
+    assert B2 == 16 and C2 >= heavy
+    # empty keys -> minimal slab
+    Be, Ce = bucketing.plan_bucket_sizes([np.zeros(0, np.int32)])
+    assert Ce == 8 and Be >= 1
+
+
+def test_planner_makes_skewed_groupby_overflow_free(rng):
+    """Above EXACT_SLAB_CAP with heavy key skew: the uniform auto-sizing
+    heuristic overflows its hottest bucket (rows dropped and counted);
+    the two-pass planner — used automatically for concrete keys — sizes
+    the slab to the real load and the counter stays zero."""
+    from repro.core import local_ops as L
+    from repro.core.table import Table
+
+    n = 600
+    assert n > bucketing.EXACT_SLAB_CAP
+    keys = _skewed_keys(rng, n)
+    data = {"k": keys, "v": rng.integers(-50, 50, n).astype(np.float32)}
+    t = Table.from_dict(data)
+    B = bucketing.default_bucket_count(n)
+    heuristic = {"num_buckets": B,
+                 "bucket_capacity": max(8, -(-n // B) * 4)}
+    _, over = L.groupby_aggregate(t, ["k"], {"v": "sum"}, impl="hash",
+                                  return_overflow=True, **heuristic)
+    assert int(over) > 0                     # the open ROADMAP failure
+    out, over = L.groupby_aggregate(t, ["k"], {"v": "sum"}, impl="hash",
+                                    return_overflow=True)
+    assert int(over) == 0                    # planner-backed auto-sizing
+    want = L.groupby_aggregate(t, ["k"], {"v": "sum"}, impl="sort")
+    got, ref = out.to_numpy(), want.to_numpy()
+    for c in ref:
+        np.testing.assert_array_equal(got[c], ref[c], err_msg=c)
+    # dedup rides the same planner
+    _, over = L.drop_duplicates(t, ["k"], impl="hash",
+                                return_overflow=True)
+    assert int(over) == 0
+
+
+def test_planner_makes_skewed_join_overflow_free(rng):
+    from repro.core import local_ops as L
+    from repro.core.table import Table
+
+    n = 600
+    keys = np.where(rng.random(n) < 0.3, 3,
+                    rng.integers(0, 5000, n)).astype(np.int32)
+    lt = Table.from_dict({"k": keys,
+                          "lv": np.arange(n, dtype=np.float32)})
+    rt = Table.from_dict({"k": keys[::-1].copy(),
+                          "rv": np.arange(n, dtype=np.float32)})
+    out_cap = 80_000
+    hj, over = L.join(lt, rt, left_on=["k"], out_capacity=out_cap,
+                      impl="hash", return_overflow=True)
+    assert int(over) == 0                    # planner-backed auto-sizing
+    sm = L.join(lt, rt, left_on=["k"], out_capacity=out_cap,
+                impl="sortmerge")
+    assert int(hj.nvalid) == int(sm.nvalid)
+    for c in sm.names:
+        np.testing.assert_array_equal(
+            np.asarray(hj.columns[c])[:int(hj.nvalid)],
+            np.asarray(sm.columns[c])[:int(sm.nvalid)], err_msg=c)
 
 
 # --------------------------------------------------------------------------

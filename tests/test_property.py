@@ -100,6 +100,47 @@ def mixed_key_tables(draw, max_rows=20):
         capacity=max(n + pad, 1))
 
 
+@given(mixed_key_tables(),
+       st.lists(st.booleans(), min_size=1, max_size=3))
+def test_sort_backends_bit_identical_and_match_oracle(t, asc):
+    """OrderBy invariants over mixed-dtype multi-key tables with per-key
+    ascending flags: the radix and xla backends are bit-identical (full
+    columns — padding rows stay last in the same order), and both match
+    the pandas-semantics oracle including stability of ties (stable
+    semantics pin tie order to original row order on every side)."""
+    from oracles import np_sort_values
+
+    by = ["ik", "fk", "v"][: len(asc)]
+    x = L.sort_values(t, by, asc, impl="xla")
+    r = L.sort_values(t, by, asc, impl="radix")
+    assert int(x.nvalid) == int(r.nvalid) == int(t.nvalid)
+    for c in t.names:
+        np.testing.assert_array_equal(np.asarray(x.columns[c]),
+                                      np.asarray(r.columns[c]),
+                                      err_msg=c)
+    data = t.to_numpy()
+    want = np_sort_values(data, by, asc)
+    got = r.to_numpy()
+    for c in want:
+        np.testing.assert_array_equal(got[c], want[c].astype(got[c].dtype),
+                                      err_msg=f"oracle {c}")
+
+
+@given(tables(), st.integers(0, 7))
+def test_compact_is_stable_boolean_argsort(t, cut):
+    """The 1-bit radix fast path behind compact/select: bit-identical to
+    the stable argsort compaction, padding rows preserved in order."""
+    keep = (t["k"] >= cut) & t.valid_mask
+    got = L.compact(t, keep)
+    perm = jnp.argsort(jnp.logical_not(keep), stable=True)
+    want = t.gather_rows(perm, jnp.sum(keep, dtype=jnp.int32))
+    assert int(got.nvalid) == int(want.nvalid)
+    for c in t.names:
+        np.testing.assert_array_equal(np.asarray(got.columns[c]),
+                                      np.asarray(want.columns[c]),
+                                      err_msg=c)
+
+
 @given(mixed_key_tables())
 def test_groupby_backends_bit_identical(t):
     aggs = {"v": ["sum", "count", "mean", "min", "max"]}
