@@ -1,0 +1,90 @@
+"""Local semi-join / set-operator backend sweep — sortmerge vs bucketed
+hash membership.
+
+isin/intersect/difference are the hot path of the UNOMT Fig.-11 filter
+and of ``dist_isin``/``dist_intersect``/``dist_difference``; the
+sortmerge backend pays a full lexicographic sort of the value set per
+call, the hash backend one bucketed build+probe pass whose cost scales
+with the slab area.  This sweep times isin, intersect and difference
+under both backends (jitted) across key cardinalities at a fixed row
+count against a ``np.isin`` baseline, and records the speedups into
+``results/bench.json``.  Slabs are sized per cardinality (the
+static-shape contract) and both backends must report identical surviving
+row counts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from .common import Reporter, timeit
+
+ROWS = 1024
+CARDS = (16, 128, 1024)
+
+
+def semi_sizes(nkeys: int, rows: int) -> dict:
+    """Slab sizing per cardinality: worst expected bucket load with >=2x
+    headroom (capacities are worst-case *per bucket*, build AND probe)."""
+    if nkeys <= 16:
+        return {"num_buckets": 8, "bucket_capacity": rows,
+                "probe_capacity": rows}
+    if nkeys <= 128:
+        return {"num_buckets": 32, "bucket_capacity": max(64, rows // 4),
+                "probe_capacity": max(64, rows // 4)}
+    return {"num_buckets": 128, "bucket_capacity": max(32, rows // 8),
+            "probe_capacity": max(32, rows // 8)}
+
+
+def numpy_isin_baseline(keys: np.ndarray, vals: np.ndarray) -> float:
+    return timeit(lambda: np.isin(keys, vals), warmup=1, iters=3)
+
+
+def run(fast: bool = False):
+    from repro.core import local_ops as L
+    from repro.core.table import Table
+
+    rep = Reporter("setops_local_backends")
+    rows = ROWS // 4 if fast else ROWS
+    rng = np.random.default_rng(0)
+    for nkeys in CARDS:
+        nkeys = min(nkeys, rows)
+        ka = rng.integers(0, nkeys, rows).astype(np.int32)
+        kb = rng.integers(nkeys // 2, nkeys + nkeys // 2,
+                          rows // 2).astype(np.int32)
+        rep.add(f"numpy_isin_k{nkeys}", "seconds",
+                numpy_isin_baseline(ka, kb), rows=rows)
+        a = Table.from_dict({"k": ka,
+                             "v": np.arange(rows, dtype=np.float32)})
+        b = Table.from_dict({"k": kb})
+        for op, call in (
+                ("isin", lambda t, v, **kw: L.isin(
+                    t, "k", v, "k", return_overflow=True, **kw)),
+                ("intersect", lambda t, v, **kw: L.intersect(
+                    t, v, on=["k"], return_overflow=True, **kw)),
+                ("difference", lambda t, v, **kw: L.difference(
+                    t, v, on=["k"], return_overflow=True, **kw))):
+            per_impl = {}
+            for impl in ("sortmerge", "hash"):
+                kw = semi_sizes(nkeys, rows) if impl == "hash" else {}
+                fn = jax.jit(partial(call, impl=impl, **kw))
+                out, over = jax.block_until_ready(fn(a, b))
+                assert int(over) == 0, (op, impl, nkeys)
+                count = int(np.asarray(out).sum()) if op == "isin" \
+                    else int(out.nvalid)
+                secs = timeit(lambda: jax.block_until_ready(fn(a, b)))
+                per_impl[impl] = (secs, count)
+                rep.add(f"{op}_{impl}_k{nkeys}", "seconds", secs,
+                        rows=rows, kept=count)
+            assert per_impl["sortmerge"][1] == per_impl["hash"][1], \
+                f"{op} backend row-count mismatch"
+            rep.add(f"{op}_hash_k{nkeys}", "speedup_vs_sortmerge",
+                    per_impl["sortmerge"][0] / per_impl["hash"][0])
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

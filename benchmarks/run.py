@@ -8,6 +8,7 @@ results/bench.json.  Figure map:
     fig4   distributed join scaling            (paper Fig. 4)
     groupby  local groupby backend sweep       (sort vs bucketed hash)
     sort   local OrderBy backend sweep         (xla vs multi-pass radix)
+    setops local semi-join backend sweep       (sortmerge vs hash probe)
     fig12  sequential data engineering         (paper Fig. 12)
     fig13  data-parallel data engineering      (paper Figs. 13-15)
     fig16  DDP deep learning on CPU            (paper Figs. 16/17)
@@ -20,12 +21,13 @@ import argparse
 
 from . import (bench_dataparallel_de, bench_ddp_train, bench_groupby,
                bench_join, bench_kernels, bench_roofline,
-               bench_sequential_de, bench_sort)
+               bench_sequential_de, bench_setops, bench_sort)
 
 BENCHES = {
     "fig4": bench_join.run,
     "groupby": bench_groupby.run,
     "sort": bench_sort.run,
+    "setops": bench_setops.run,
     "fig12": bench_sequential_de.run,
     "fig13": bench_dataparallel_de.run,
     "fig16": bench_ddp_train.run,

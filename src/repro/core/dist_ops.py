@@ -25,8 +25,11 @@ sort (OrderBy)     sample-sort: local sort + splitter ``all_gather`` +
                    ``"xla"`` (``lax.sort``, default) or ``"radix"``
                    (multi-pass LSD rank, kernels/radix_sort) — so the
                    distributed sort runs sort-primitive-free end to end
-difference/        shuffle both sides + local set op
-intersect
+difference/        shuffle both sides + local set op; the local semi-join
+intersect/isin     backend is pluggable via ``local_impl`` —
+                   ``"sortmerge"`` (default) or ``"hash"`` (bucketed
+                   membership probe, kernels/hash_semi) — so the
+                   distributed set ops run hash-local end to end
 repartition        global-rank range partition + ``all_to_all``
                    (straggler/skew mitigation)
 =================  =======================================================
@@ -291,17 +294,61 @@ def dist_unique(ctx: HptmtContext, table: Table, subset: Sequence[str],
 
 
 def dist_difference(ctx: HptmtContext, a: Table, b: Table,
-                    on: Sequence[str], overcommit: float = 2.0):
+                    on: Sequence[str], overcommit: float = 2.0,
+                    local_impl: str | None = None,
+                    semi_sizes: Mapping[str, int] | None = None):
+    """Distributed Difference: shuffle both sides on the key + local
+    difference.  Equal keys co-locate (the partition hash is over key
+    *values*), so per-shard membership is global membership.
+
+    ``local_impl`` selects the local semi-join backend ('sortmerge' |
+    'hash', default ``kernel_backend.semi_impl()``); ``semi_sizes``
+    forwards hash-backend static sizing (``num_buckets`` /
+    ``bucket_capacity`` / ``probe_capacity``).  The hash path's slab
+    overflow drops join the shuffle drops in the returned counter."""
     ash, d1 = shuffle(ctx, a, on, overcommit=overcommit)
     bsh, d2 = shuffle(ctx, b, on, overcommit=overcommit)
-    return L.difference(ash, bsh, on=list(on)), d1 + d2
+    out, over = L.difference(ash, bsh, on=list(on), impl=local_impl,
+                             return_overflow=True,
+                             **dict(semi_sizes or {}))
+    return out, d1 + d2 + jax.lax.psum(over, ctx.row_axes)
 
 
 def dist_intersect(ctx: HptmtContext, a: Table, b: Table,
-                   on: Sequence[str], overcommit: float = 2.0):
+                   on: Sequence[str], overcommit: float = 2.0,
+                   local_impl: str | None = None,
+                   dedup_impl: str | None = None,
+                   semi_sizes: Mapping[str, int] | None = None):
+    """Distributed Intersect: shuffle both sides on the key + local
+    intersect.  ``local_impl`` selects the local semi-join backend
+    ('sortmerge' | 'hash'), ``dedup_impl`` the local dedup backend
+    ('sort' | 'hash'); ``semi_sizes`` forwards hash-backend static
+    sizing.  Slab-overflow drops join the shuffle drops in the counter."""
     ash, d1 = shuffle(ctx, a, on, overcommit=overcommit)
     bsh, d2 = shuffle(ctx, b, on, overcommit=overcommit)
-    return L.intersect(ash, bsh, on=list(on)), d1 + d2
+    out, over = L.intersect(ash, bsh, on=list(on), impl=local_impl,
+                            dedup_impl=dedup_impl, return_overflow=True,
+                            **dict(semi_sizes or {}))
+    return out, d1 + d2 + jax.lax.psum(over, ctx.row_axes)
+
+
+def dist_isin(ctx: HptmtContext, table: Table, col: str, values: Table,
+              values_col: str, overcommit: float = 2.0,
+              local_impl: str | None = None,
+              semi_sizes: Mapping[str, int] | None = None):
+    """Distributed membership filter: rows of ``table`` whose ``col`` is
+    present among ``values[values_col]`` anywhere in the world.
+
+    Both sides are shuffled on their key column — ``partition_ids``
+    hashes column *values* (name-independent), so a table row and its
+    matching value land on the same shard — then the local :func:`isin`
+    mask selects.  ``local_impl`` / ``semi_sizes`` as in
+    :func:`dist_difference`.  Returns ``(filtered_table, dropped)``."""
+    tsh, d1 = shuffle(ctx, table, [col], overcommit=overcommit)
+    vsh, d2 = shuffle(ctx, values, [values_col], overcommit=overcommit)
+    mask, over = L.isin(tsh, col, vsh, values_col, impl=local_impl,
+                        return_overflow=True, **dict(semi_sizes or {}))
+    return L.select(tsh, mask), d1 + d2 + jax.lax.psum(over, ctx.row_axes)
 
 
 # --------------------------------------------------------------------------

@@ -9,6 +9,8 @@ references execute instead, and tests exercise the kernels via
 * ``REPRO_JOIN_IMPL``    — local join algorithm: ``sortmerge | hash``;
 * ``REPRO_GROUPBY_IMPL`` — local groupby/dedup algorithm: ``sort | hash``;
 * ``REPRO_SORT_IMPL``    — local sort/OrderBy algorithm: ``xla | radix``;
+* ``REPRO_SEMI_IMPL``    — local semi-join/membership algorithm
+  (isin / intersect / difference): ``sortmerge | hash``;
 * ``REPRO_ATTN_IMPL`` / ``REPRO_MAMBA_IMPL`` — model kernels.
 """
 import os
@@ -57,6 +59,18 @@ def sort_impl() -> str:
     if env:
         return env
     return "xla"
+
+
+def semi_impl() -> str:
+    """Local semi-join/membership algorithm (isin / _semi_mask /
+    intersect / difference): 'sortmerge' (binary search over sorted keys,
+    default) or 'hash' (bucketed build+probe membership on
+    ``kernels/hash_semi`` — no join materialization, no ``sort``
+    primitive anywhere on the path)."""
+    env = os.environ.get("REPRO_SEMI_IMPL")
+    if env:
+        return env
+    return "sortmerge"
 
 
 def attention_impl() -> str:

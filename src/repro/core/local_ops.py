@@ -49,6 +49,20 @@ TPU adaptation notes (see DESIGN.md §2):
   ``sum``/``mean`` are bit-identical whenever addition is exact, e.g.
   integer-valued data, and agree to rounding otherwise);
 
+* the membership family (isin, semi_mask, intersect, difference) has two
+  backends via ``impl`` (default ``kernel_backend.semi_impl()`` /
+  ``REPRO_SEMI_IMPL``):
+
+  - ``"sortmerge"`` — sort the right key set, binary-search each probe;
+  - ``"hash"`` — bucketed build+probe membership on ``kernels/hash_semi``:
+    one boolean per probe row, no join materialization, **no sort
+    primitive anywhere on the path**;
+
+  both compare key pairs in their *promoted* common dtype (as do the
+  join backends), so mixed-dtype probes cannot collide distinct keys —
+  bit-identical masks either way (conformance:
+  tests/test_setop_backends.py);
+
 * multi-column keys are exact in both backends: lexicographic binary
   search (:func:`lex_searchsorted`) / full key-bit equality — no hash
   collisions, no int64 packing.
@@ -65,10 +79,12 @@ from ..kernels import bucketing
 from ..kernels.hash_groupby import (default_hash_groupby_sizes,
                                     hash_groupby_plan)
 from ..kernels.hash_join import default_hash_join_sizes, hash_join_plan
+from ..kernels.hash_semi import default_hash_semi_sizes, hash_semi_plan
 from ..kernels.radix_sort import (radix_permutation, radix_rank,
                                   stable_partition_perm)
 from .kernel_backend import groupby_impl as _default_groupby_impl
 from .kernel_backend import join_impl as _default_join_impl
+from .kernel_backend import semi_impl as _default_semi_impl
 from .kernel_backend import sort_impl as _default_sort_impl
 from .kernel_backend import table_kernel_impl as _default_kernel_impl
 from .table import Table, isnull_values, null_like
@@ -630,8 +646,15 @@ def _sortmerge_join(left: Table, right: Table, left_on, right_on, how,
     mapped back to its (left row, match offset) pair with a second
     searchsorted — fully vectorized, no dynamic shapes."""
     rs, rkeys = _sorted_keys_with_sentinel(right, right_on)
-    qkeys = tuple(left.columns[k].astype(rs.columns[rk].dtype)
-                  for k, rk in zip(left_on, right_on))
+    # compare every key pair in the *promoted* common dtype (casting the
+    # sorted keys is order-preserving: int32 -> float32 is monotonic), so
+    # a mixed-dtype probe cannot collide distinct keys
+    dts = tuple(jnp.promote_types(left.columns[k].dtype,
+                                  rs.columns[rk].dtype)
+                for k, rk in zip(left_on, right_on))
+    qkeys = tuple(left.columns[k].astype(dt)
+                  for k, dt in zip(left_on, dts))
+    rkeys = tuple(rk.astype(dt) for rk, dt in zip(rkeys, dts))
     lo = lex_searchsorted(rkeys, qkeys, side="left")
     hi = lex_searchsorted(rkeys, qkeys, side="right")
     lo = jnp.minimum(lo, right.nvalid)
@@ -676,9 +699,11 @@ def _hash_join(left: Table, right: Table, left_on, right_on, how,
     is original-right-row order."""
     B, C, Lc = default_hash_join_sizes(left.capacity, right.capacity,
                                        num_buckets)
-    qkeys = tuple(left.columns[k].astype(right.columns[rk].dtype)
-                  for k, rk in zip(left_on, right_on))
-    rkeys = tuple(right.columns[rk] for rk in right_on)
+    # compare in the promoted common dtype (same rule as the sort-merge
+    # backend): the hash only picks the bucket, equality is on the
+    # promoted key bits
+    qkeys, rkeys = _promoted_semi_keys(left, right, list(left_on),
+                                       list(right_on))
     # two-pass planner (concrete keys, above the exact-slab range): size
     # the build chains / probe slabs to the real per-bucket maxima
     big = max(left.capacity, right.capacity)
@@ -743,8 +768,13 @@ def _hash_join(left: Table, right: Table, left_on, right_on, how,
 
 
 def cartesian_product(left: Table, right: Table, out_capacity: int,
-                      suffix: str = "_r") -> Table:
-    """Paper's Cartesian Product (static output capacity)."""
+                      suffix: str = "_r", return_overflow: bool = False):
+    """Paper's Cartesian Product (static output capacity).
+
+    Output rows beyond ``out_capacity`` are dropped and *counted* — the
+    same "dropped and counted" contract as join/groupby overflow
+    (``return_overflow=True`` returns the count; callers size the
+    capacity so it stays zero)."""
     n2 = jnp.maximum(right.nvalid, 1)
     j = jnp.arange(out_capacity, dtype=jnp.int32)
     lrow = jnp.clip(j // n2, 0, max(left.capacity - 1, 0))
@@ -754,50 +784,216 @@ def cartesian_product(left: Table, right: Table, out_capacity: int,
     for n in right.names:
         name = n + suffix if n in cols else n
         cols[name] = right.columns[n][rrow]
-    return Table(columns=cols, nvalid=jnp.minimum(total, out_capacity))
+    out = Table(columns=cols, nvalid=jnp.minimum(total, out_capacity))
+    if return_overflow:
+        return out, jnp.maximum(total - out_capacity, 0)
+    return out
 
 
 # --------------------------------------------------------------------------
-# Membership + set operators
+# Membership + set operators (pluggable semi-join backend: sort-merge /
+# bucketed hash membership probe — no join materialization either way)
 # --------------------------------------------------------------------------
 
 
-def isin(table: Table, col: str, values: Table, values_col: str) -> jax.Array:
-    """Bool mask: table[col] present among valid values[values_col]."""
-    vs, vkeys = _sorted_keys_with_sentinel(values, [values_col])
-    q = (table.columns[col].astype(vs.columns[values_col].dtype),)
-    lo = lex_searchsorted(vkeys, q, side="left")
-    hi = lex_searchsorted(vkeys, q, side="right")
-    lo = jnp.minimum(lo, values.nvalid)
-    hi = jnp.minimum(hi, values.nvalid)
-    return (hi > lo) & table.valid_mask
+def _promoted_semi_keys(left: Table, right: Table, left_on: list,
+                        right_on: list):
+    """Both sides' key columns cast to their *promoted* common dtype.
+
+    Comparing in either side's dtype can collide distinct keys (e.g. a
+    float32 3.7 probe truncated to int32 3), so membership — like the
+    join backends — compares every key pair in ``jnp.promote_types`` of
+    the two column dtypes (int32 x float32 -> float32)."""
+    q, v = [], []
+    for lk, rk in zip(left_on, right_on):
+        lc, rc = left.columns[lk], right.columns[rk]
+        dt = jnp.promote_types(lc.dtype, rc.dtype)
+        q.append(lc.astype(dt))
+        v.append(rc.astype(dt))
+    return tuple(q), tuple(v)
 
 
-def _semi_mask(left: Table, right: Table, on: Sequence[str]) -> jax.Array:
-    rs, rkeys = _sorted_keys_with_sentinel(right, list(on))
-    q = tuple(left.columns[k].astype(rs.columns[k].dtype) for k in on)
-    lo = lex_searchsorted(rkeys, q, side="left")
-    hi = lex_searchsorted(rkeys, q, side="right")
-    lo = jnp.minimum(lo, right.nvalid)
-    hi = jnp.minimum(hi, right.nvalid)
-    return (hi > lo) & left.valid_mask
+def _sortmerge_semi(qkeys: tuple, lvalid: jax.Array, vkeys: tuple,
+                    rnvalid) -> jax.Array:
+    """Sort-merge membership: sort the right key set, binary-search each
+    left key's match range — member iff the range is non-empty."""
+    vt = Table(columns={f"k{i}": c for i, c in enumerate(vkeys)},
+               nvalid=rnvalid)
+    _, skeys = _sorted_keys_with_sentinel(vt, list(vt.names))
+    lo = lex_searchsorted(skeys, qkeys, side="left")
+    hi = lex_searchsorted(skeys, qkeys, side="right")
+    lo = jnp.minimum(lo, rnvalid)
+    hi = jnp.minimum(hi, rnvalid)
+    return (hi > lo) & lvalid
 
 
-def intersect(a: Table, b: Table, on: Sequence[str] | None = None) -> Table:
-    """Paper's Intersect: distinct rows of ``a`` present in ``b``."""
+def _hash_semi(qkeys: tuple, left: Table, vkeys: tuple, right: Table,
+               num_buckets, bucket_capacity, probe_capacity, kernel_impl):
+    """Hash membership: build the right side's key set into bucket slabs
+    (kernels/hash_semi, the hash_groupby/bucketing slab plan) and probe
+    each left key — one boolean per row, no join materialization, no
+    sort primitive.  Probe-dropped rows report False and are counted."""
+    B, C, Lc = default_hash_semi_sizes(left.capacity, right.capacity,
+                                       num_buckets)
+    # two-pass planner (concrete keys, above the exact-slab range): size
+    # the build/probe slabs to the real per-bucket maxima
+    big = max(left.capacity, right.capacity)
+    built = _planned_sizes(vkeys, right.nvalid, big, B, bucket_capacity)
+    if built is not None:
+        C = built[1]
+    probed = _planned_sizes(qkeys, left.nvalid, big, B, probe_capacity)
+    if probed is not None:
+        Lc = probed[1]
+    C = bucket_capacity or C
+    Lc = probe_capacity or Lc
+    plan = hash_semi_plan(qkeys, left.valid_mask, vkeys, right.valid_mask,
+                          num_buckets=B, bucket_capacity=C,
+                          probe_capacity=Lc,
+                          impl=kernel_impl or _default_kernel_impl())
+    mask = plan.member & left.valid_mask
+    return mask, plan.build_dropped + plan.probe_dropped
+
+
+def semi_mask(left: Table, right: Table, left_on: Sequence[str],
+              right_on: Sequence[str] | None = None, *,
+              impl: str | None = None, return_overflow: bool = False,
+              num_buckets: int | None = None,
+              bucket_capacity: int | None = None,
+              probe_capacity: int | None = None,
+              kernel_impl: str | None = None):
+    """Semi-join membership mask: per left row, does its key appear among
+    the right table's valid keys?
+
+    ``impl`` picks the backend (default ``kernel_backend.semi_impl()`` /
+    ``REPRO_SEMI_IMPL``): ``"sortmerge"`` (binary search over the sorted
+    right key set) or ``"hash"`` (bucketed build+probe membership on the
+    ``kernels/hash_semi`` plan — no join materialization, no ``sort``
+    primitive anywhere on the path).  Both emit the *bit-identical* mask
+    — key pairs are compared in their promoted common dtype either way —
+    so they are drop-in interchangeable (conformance:
+    tests/test_setop_backends.py).
+
+    The hash backend adds static ``num_buckets`` / ``bucket_capacity`` /
+    ``probe_capacity`` sizing (auto-sized from the table capacities when
+    omitted) and ``kernel_impl`` (ref | pallas | pallas_interpret); rows
+    overflowing a slab are dropped — reported non-member — and counted
+    (``return_overflow=True`` returns the count)."""
+    left_on = list(left_on)
+    right_on = list(right_on) if right_on is not None else left_on
+    impl = impl or _default_semi_impl()
+    qkeys, vkeys = _promoted_semi_keys(left, right, left_on, right_on)
+    if impl == "sortmerge":
+        mask, over = _sortmerge_semi(qkeys, left.valid_mask, vkeys,
+                                     right.nvalid), jnp.int32(0)
+    elif impl == "hash":
+        mask, over = _hash_semi(qkeys, left, vkeys, right, num_buckets,
+                                bucket_capacity, probe_capacity,
+                                kernel_impl)
+    else:
+        raise ValueError(f"unknown semi impl {impl!r} "
+                         "(expected 'sortmerge' or 'hash')")
+    if return_overflow:
+        return mask, over
+    return mask
+
+
+def _semi_mask(left: Table, right: Table, on: Sequence[str],
+               **kwargs):
+    """Same-named-columns :func:`semi_mask` (the set operators' shape)."""
+    return semi_mask(left, right, on, on, **kwargs)
+
+
+def isin(table: Table, col: str, values: Table, values_col: str, *,
+         impl: str | None = None, return_overflow: bool = False,
+         num_buckets: int | None = None, bucket_capacity: int | None = None,
+         probe_capacity: int | None = None, kernel_impl: str | None = None):
+    """Bool mask: table[col] present among valid values[values_col].
+
+    A single-key :func:`semi_mask` — the paper's membership filter
+    (UNOMT Fig. 11).  Keys are compared in the promoted common dtype of
+    the two columns, so e.g. a float32 probe against an int32 values
+    table cannot collide distinct keys.  See :func:`semi_mask` for the
+    backend (``impl`` / ``REPRO_SEMI_IMPL``) and overflow contracts."""
+    return semi_mask(table, values, [col], [values_col], impl=impl,
+                     return_overflow=return_overflow,
+                     num_buckets=num_buckets,
+                     bucket_capacity=bucket_capacity,
+                     probe_capacity=probe_capacity, kernel_impl=kernel_impl)
+
+
+def intersect(a: Table, b: Table, on: Sequence[str] | None = None, *,
+              impl: str | None = None, dedup_impl: str | None = None,
+              return_overflow: bool = False,
+              num_buckets: int | None = None,
+              bucket_capacity: int | None = None,
+              probe_capacity: int | None = None,
+              kernel_impl: str | None = None):
+    """Paper's Intersect: distinct rows of ``a`` present in ``b``.
+
+    ``impl`` selects the semi-join backend (see :func:`semi_mask`);
+    ``dedup_impl`` the dedup backend (see :func:`drop_duplicates`,
+    default ``kernel_backend.groupby_impl()``).  Output is the canonical
+    table (one row per distinct key, sorted by the ``on`` columns) —
+    bit-identical across all backend combinations.
+    ``return_overflow=True`` returns the summed semi + dedup overflow."""
     on = list(on) if on is not None else list(a.names)
-    return drop_duplicates(compact(a, _semi_mask(a, b, on)), on)
+    mask, s_over = _semi_mask(a, b, on, impl=impl, return_overflow=True,
+                              num_buckets=num_buckets,
+                              bucket_capacity=bucket_capacity,
+                              probe_capacity=probe_capacity,
+                              kernel_impl=kernel_impl)
+    out, d_over = drop_duplicates(compact(a, mask), on, impl=dedup_impl,
+                                  return_overflow=True,
+                                  kernel_impl=kernel_impl)
+    if return_overflow:
+        return out, s_over + d_over
+    return out
 
 
-def difference(a: Table, b: Table, on: Sequence[str] | None = None) -> Table:
-    """Paper's Difference: rows of ``a`` with no match in ``b``."""
+def difference(a: Table, b: Table, on: Sequence[str] | None = None, *,
+               impl: str | None = None, return_overflow: bool = False,
+               num_buckets: int | None = None,
+               bucket_capacity: int | None = None,
+               probe_capacity: int | None = None,
+               kernel_impl: str | None = None):
+    """Paper's Difference: rows of ``a`` with no match in ``b`` (all
+    occurrences, original row order).
+
+    ``impl`` selects the semi-join backend (see :func:`semi_mask`); both
+    backends emit bit-identical output.  Under the hash backend a
+    probe-dropped row's membership is unknown, so it is excluded and
+    counted (``return_overflow=True``), never guessed into the output."""
     on = list(on) if on is not None else list(a.names)
-    return compact(a, a.valid_mask & ~_semi_mask(a, b, on))
+    mask, over = _semi_mask(a, b, on, impl=impl, return_overflow=True,
+                            num_buckets=num_buckets,
+                            bucket_capacity=bucket_capacity,
+                            probe_capacity=probe_capacity,
+                            kernel_impl=kernel_impl)
+    out = compact(a, a.valid_mask & ~mask)
+    if return_overflow:
+        return out, over
+    return out
 
 
-def union(a: Table, b: Table) -> Table:
-    """Paper's Union: concat + dedup."""
-    return drop_duplicates(concat(a, b))
+def union(a: Table, b: Table, on: Sequence[str] | None = None, *,
+          impl: str | None = None, return_overflow: bool = False,
+          num_buckets: int | None = None,
+          bucket_capacity: int | None = None,
+          kernel_impl: str | None = None):
+    """Paper's Union: concat + dedup on the ``on`` key columns (all
+    columns when omitted), keeping each key's first occurrence — ``a``'s
+    rows win ties against ``b``'s.
+
+    ``impl`` selects the dedup backend ('sort' | 'hash', see
+    :func:`drop_duplicates` / ``REPRO_GROUPBY_IMPL``) with its static
+    sizing; rows overflowing a hash bucket slab are dropped and counted
+    (``return_overflow=True`` returns the count) — never silently lost."""
+    on = list(on) if on is not None else list(a.names)
+    return drop_duplicates(concat(a, b), on, impl=impl,
+                           return_overflow=return_overflow,
+                           num_buckets=num_buckets,
+                           bucket_capacity=bucket_capacity,
+                           kernel_impl=kernel_impl)
 
 
 # --------------------------------------------------------------------------

@@ -97,16 +97,20 @@ def _clean_response(resp: Table, ctx: HptmtContext | None = None) -> Table:
 
 def unomt_local_pipeline(resp: Table, desc: Table, fp: Table, rna: Table,
                          *, n_drug_feat: int = 8, n_rna_feat: int = 8,
-                         out_capacity: int | None = None) -> Table:
-    """Single-partition version of Figures 8–11 (jittable)."""
+                         out_capacity: int | None = None,
+                         semi_impl: str | None = None) -> Table:
+    """Single-partition version of Figures 8–11 (jittable).
+
+    ``semi_impl`` selects the Fig.-11 membership backend ('sortmerge' |
+    'hash', default ``kernel_backend.semi_impl()``)."""
     t = _clean_response(resp)
     drug = L.join(desc, fp, left_on=["drug_id"],
                   out_capacity=desc.capacity)              # Fig. 9
     rna_u = L.drop_duplicates(rna, ["cell_id"])            # Fig. 10
     rna_u = L.standard_scale(rna_u, rna_cols(n_rna_feat))
     # Fig. 11: keep response rows whose drug/cell exist in both sides
-    keep = L.isin(t, "drug_id", drug, "drug_id") & \
-        L.isin(t, "cell_id", rna_u, "cell_id")
+    keep = L.isin(t, "drug_id", drug, "drug_id", impl=semi_impl) & \
+        L.isin(t, "cell_id", rna_u, "cell_id", impl=semi_impl)
     t = L.select(t, keep)
     t = L.join(t, drug, left_on=["drug_id"],
                out_capacity=out_capacity or t.capacity)
@@ -117,10 +121,14 @@ def unomt_local_pipeline(resp: Table, desc: Table, fp: Table, rna: Table,
 
 def unomt_dist_pipeline(ctx: HptmtContext, resp: Table, desc: Table,
                         fp: Table, rna: Table, *, n_drug_feat: int = 8,
-                        n_rna_feat: int = 8, overcommit: float = 4.0):
+                        n_rna_feat: int = 8, overcommit: float = 4.0,
+                        semi_impl: str | None = None):
     """Distributed version: local cleanup is pleasingly parallel (paper
     §4.3); joins/unique are the distributed operators.  Returns
     (features table, total dropped rows) — run under DistributedPipeline.
+
+    ``semi_impl`` selects the membership backend for the Fig.-11 filter
+    ('sortmerge' | 'hash', default ``kernel_backend.semi_impl()``).
     """
     t = _clean_response(resp, ctx)
     drug, d1 = D.dist_join(ctx, desc, fp, left_on=["drug_id"],
@@ -131,8 +139,8 @@ def unomt_dist_pipeline(ctx: HptmtContext, resp: Table, desc: Table,
     # membership against the *global* id sets (broadcast the small keys)
     drug_ids = D.all_gather_table(ctx, L.project(drug, ["drug_id"]))
     cell_ids = D.all_gather_table(ctx, L.project(rna_u, ["cell_id"]))
-    keep = L.isin(t, "drug_id", drug_ids, "drug_id") & \
-        L.isin(t, "cell_id", cell_ids, "cell_id")
+    keep = L.isin(t, "drug_id", drug_ids, "drug_id", impl=semi_impl) & \
+        L.isin(t, "cell_id", cell_ids, "cell_id", impl=semi_impl)
     t = L.select(t, keep)
     t, d3 = D.dist_join(ctx, t, drug, left_on=["drug_id"],
                         overcommit=overcommit)

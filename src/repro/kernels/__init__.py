@@ -2,4 +2,4 @@
 BlockSpec), ops.py (jit'd wrapper + backend dispatch), ref.py (pure-jnp
 oracle used for interpret-mode validation)."""
 from . import (flash_attention, hash_groupby, hash_join,  # noqa: F401
-               hash_partition, mamba_scan, radix_sort)
+               hash_partition, hash_semi, mamba_scan, radix_sort)

@@ -1,0 +1,98 @@
+"""Jitted bucketed hash semi-join (membership) plan.
+
+:func:`hash_semi_plan` is the op the table engine calls for
+``isin``/``_semi_mask``/``intersect``/``difference`` under
+``impl="hash"``: it buckets both sides by a murmur-style key hash using
+the shared ``kernels.bucketing`` slab machinery (build side = the right
+table's key set, probe side = the left rows), runs the bucketed
+membership probe (Pallas kernel on TPU, pure-jnp ref elsewhere) and
+returns one boolean per original left row — **membership without
+materializing a join**: no match ranks, no pair-space output, no sort
+anywhere in the plan.
+
+Static-shape contract (the same philosophy as the hash join): a bucket
+holds at most ``bucket_capacity`` build rows and ``probe_capacity`` probe
+rows.  Overflowing rows are dropped and *counted* (``build_dropped`` /
+``probe_dropped``) — callers size the capacities so both are zero, and
+the conformance suite checks the counters trip exactly at capacity.  A
+probe-dropped left row's membership is unknown: it reports ``member=
+False`` / ``probed=False`` and is counted, never guessed.
+
+Keys are compared as int32 bit-planes (floats are bitcast after
+normalizing ``-0.0`` to ``+0.0``), so multi-column keys are exact — the
+hash only picks the bucket; membership is decided on the full key bits.
+NaN float keys compare equal-by-bits (membership of NaN keys is out of
+contract, as it is for the sort-merge path's sort order).  The engine
+casts both sides to their *promoted* common dtype before this plan (the
+same rule as the sort-merge path), so mixed-dtype probes cannot collide
+distinct keys.
+"""
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..bucketing import group_to_slabs, key_bits
+from ..hash_join import default_hash_join_sizes
+from .kernel import bucket_member_buckets
+from .ref import bucket_member_ref
+
+# build slab = right key set, probe slab = left rows: the sizing problem
+# is identical to the hash join's build/probe slabs, so the heuristics
+# (full-capacity slabs up to EXACT_SLAB_CAP, ~16 rows/bucket with 4x
+# headroom above) are shared verbatim.
+default_hash_semi_sizes = default_hash_join_sizes
+
+
+class HashSemiPlan(NamedTuple):
+    """Membership results mapped back to original left-row ids."""
+
+    member: jnp.ndarray          # (Lcap,) bool: key present in build side
+    probed: jnp.ndarray          # (Lcap,) bool: left row made it into a slab
+    build_dropped: jnp.ndarray   # () int32 right rows lost to slab overflow
+    probe_dropped: jnp.ndarray   # () int32 left rows lost to slab overflow
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets",
+                                             "bucket_capacity",
+                                             "probe_capacity", "impl"))
+def hash_semi_plan(left_keys: tuple, left_valid: jnp.ndarray,
+                   right_keys: tuple, right_valid: jnp.ndarray, *,
+                   num_buckets: int, bucket_capacity: int,
+                   probe_capacity: int, impl: str = "ref") -> HashSemiPlan:
+    """Bucketed build (right key set) + membership probe (left) over
+    parallel key columns.
+
+    impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    """
+    B, C, Lc = num_buckets, bucket_capacity, probe_capacity
+    lbits = tuple(key_bits(c) for c in left_keys)
+    rbits = tuple(key_bits(c) for c in right_keys)
+    lcap = left_valid.shape[0]
+
+    bslab, bocc, _, _, build_dropped = group_to_slabs(
+        rbits, right_valid, B, C, impl)
+    pslab, pocc, prow, _, probe_dropped = group_to_slabs(
+        lbits, left_valid, B, Lc, impl)
+
+    num_keys = len(lbits)
+    pb = pslab.reshape(num_keys, B, Lc).transpose(1, 0, 2)
+    bb = bslab.reshape(num_keys, B, C).transpose(1, 0, 2)
+    po = pocc.reshape(B, Lc)
+    bo = bocc.reshape(B, C)
+    if impl == "ref":
+        member_g = bucket_member_ref(pb, po, bb, bo)
+    else:
+        member_g = bucket_member_buckets(
+            pb, po, bb, bo, interpret=(impl == "pallas_interpret"))
+
+    # members back to original left-row order (trash slot lcap for empties)
+    idx = jnp.where(pocc > 0, prow, lcap)
+    member = (jnp.zeros((lcap + 1,), bool)
+              .at[idx].set(member_g.reshape(-1) > 0)[:lcap])
+    probed = (jnp.zeros((lcap + 1,), bool)
+              .at[idx].set(pocc > 0)[:lcap])
+    return HashSemiPlan(member=member, probed=probed,
+                        build_dropped=build_dropped,
+                        probe_dropped=probe_dropped)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the bucketed hash semi-join membership kernel.
+
+Both sides arrive already *bucket-grouped* (ops.py does the grouping with
+the shared ``kernels.bucketing`` slab machinery): for each of ``B``
+buckets there is a probe slab of ``Lc`` slots and a build slab of ``C``
+slots, each slot holding the row's key bit-planes (``K`` int32 planes per
+key) plus an occupancy flag.  The membership probe computes, per bucket:
+
+* ``member`` — ``(B, Lc)`` int32 1 iff the probe slot is occupied and
+  *any* occupied build slot carries the same key.
+
+This is the hash join probe with the ``(Lc, C)`` match matrix reduced to
+a single boolean per probe row — no match ranks, no pair-space output, so
+a semi-join/membership filter never materializes a join.  A pair matches
+iff *all* key bit-planes are equal and both slots are occupied; equal
+keys always share a bucket (``bucketing.bucket_ids``), so the per-bucket
+reduction is exact.
+"""
+import jax.numpy as jnp
+
+
+def bucket_member_ref(pbits: jnp.ndarray, pocc: jnp.ndarray,
+                      bbits: jnp.ndarray, bocc: jnp.ndarray):
+    """pbits (B, K, Lc) int32, pocc (B, Lc) int32 0/1, bbits (B, K, C),
+    bocc (B, C) -> member (B, Lc) int32 0/1."""
+    match = (pocc[:, :, None] > 0) & (bocc[:, None, :] > 0)
+    num_keys = pbits.shape[1]
+    for k in range(num_keys):
+        match = match & (pbits[:, k, :, None] == bbits[:, k, None, :])
+    return jnp.any(match, axis=2).astype(jnp.int32)

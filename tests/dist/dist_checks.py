@@ -147,6 +147,62 @@ def check_sort(ctx, rng, local_impl):
     print(f"dist_sort[{local_impl}] ok")
 
 
+def check_isin(ctx, rng, local_impl):
+    rows = 96
+    data = {"k": rng.integers(0, 30, rows).astype(np.int32),
+            "v": rng.normal(size=rows).astype(np.float32)}
+    vals = {"m": rng.integers(15, 45, rows // 2).astype(np.int32)}
+    cap = (rows // WORLD) * 4
+    t = D.distribute_table(ctx, data, capacity_per_shard=cap)
+    v = D.distribute_table(ctx, vals, capacity_per_shard=cap)
+    sizes = {"num_buckets": 8, "bucket_capacity": rows,
+             "probe_capacity": rows}
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, a, b: D.dist_isin(
+            c, a, "k", b, "m", overcommit=4.0, local_impl=local_impl,
+            semi_sizes=sizes if local_impl == "hash" else None))
+    out, dropped = pipe(t, v)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    keep = np.isin(data["k"], vals["m"])
+    want = {c: a[keep] for c, a in data.items()}
+    assert as_sets(got) == as_sets(want), f"isin[{local_impl}] mismatch"
+    print(f"dist_isin[{local_impl}] ok ({int(keep.sum())} rows)")
+
+
+def check_setops(ctx, rng, local_impl):
+    rows = 80
+    a = {"k": rng.integers(0, 25, rows).astype(np.int32)}
+    b = {"k": rng.integers(12, 40, rows).astype(np.int32)}
+    cap = (rows // WORLD) * 4
+    sizes = {"num_buckets": 8, "bucket_capacity": rows,
+             "probe_capacity": rows}
+    semi = sizes if local_impl == "hash" else None
+    ga = D.distribute_table(ctx, a, capacity_per_shard=cap)
+    gb = D.distribute_table(ctx, b, capacity_per_shard=cap)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, x, y: D.dist_intersect(
+            c, x, y, ["k"], overcommit=4.0, local_impl=local_impl,
+            semi_sizes=semi))
+    out, dropped = pipe(ga, gb)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    want = np.intersect1d(a["k"], b["k"])
+    assert sorted(got["k"]) == sorted(want), local_impl
+    ga = D.distribute_table(ctx, a, capacity_per_shard=cap)
+    gb = D.distribute_table(ctx, b, capacity_per_shard=cap)
+    pipe = D.DistributedPipeline(
+        ctx, lambda c, x, y: D.dist_difference(
+            c, x, y, ["k"], overcommit=4.0, local_impl=local_impl,
+            semi_sizes=semi))
+    out, dropped = pipe(ga, gb)
+    assert int(np.max(np.asarray(dropped))) == 0
+    got = D.collect_table(ctx, out)
+    keep = ~np.isin(a["k"], b["k"])
+    assert sorted(got["k"]) == sorted(a["k"][keep]), local_impl
+    print(f"dist_intersect/difference[{local_impl}] ok")
+
+
 def check_repartition(ctx, rng):
     # skewed layout: all rows start on few shards
     data = {"a": np.arange(50, dtype=np.int32)}
@@ -176,6 +232,10 @@ def main():
     check_unique(ctx, rng)
     check_sort(ctx, rng, "xla")
     check_sort(ctx, rng, "radix")
+    check_isin(ctx, rng, "sortmerge")
+    check_isin(ctx, rng, "hash")
+    check_setops(ctx, rng, "sortmerge")
+    check_setops(ctx, rng, "hash")
     check_repartition(ctx, rng)
     print("DIST CHECKS PASSED")
 

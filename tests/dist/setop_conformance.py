@@ -1,0 +1,108 @@
+"""Subprocess worker for tests/test_setop_backends.py: distributed
+isin/intersect/difference conformance at a given world size.
+
+Usage: XLA_FLAGS=...device_count=W python setop_conformance.py W
+
+For each key distribution, runs dist_isin, dist_intersect and
+dist_difference with BOTH local semi-join backends under one shard_map
+and checks (a) the backends are bit-identical per shard (the shuffle is
+backend-independent, and equal keys co-locate because the partition hash
+is over key *values*), and (b) both match the pandas-semantics numpy
+oracle as row multisets (shard order is world-size-dependent, global
+content is not).  Prints ``SETOP CONFORMANCE PASSED`` on success.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from oracles import (as_sets, np_difference, np_intersect,  # noqa: E402
+                     np_isin)
+
+
+def distributions(rng, rows):
+    return {
+        "uniform": (rng.integers(0, 12, rows).astype(np.int32),
+                    rng.integers(6, 18, rows // 2).astype(np.int32)),
+        "skewed": (np.where(rng.random(rows) < 0.6, 3,
+                            rng.integers(0, 40, rows)).astype(np.int32),
+                   np.where(rng.random(rows // 2) < 0.5, 3,
+                            rng.integers(20, 60,
+                                         rows // 2)).astype(np.int32)),
+        "allequal": (np.full(rows, 7, np.int32),
+                     np.full(rows // 2, 7, np.int32)),
+    }
+
+
+def main():
+    world = int(sys.argv[1])
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import dist_ops as D
+    from repro.core.context import make_context
+
+    dev = np.array(jax.devices()[:world])
+    ctx = make_context(Mesh(dev, ("data",)))
+    rng = np.random.default_rng(world)
+    rows = 96
+    cap = (rows // world) * 4
+    # post-shuffle a shard holds <= rows valid rows, so slab capacity
+    # = rows is distribution-proof (allequal puts every row in 1 bucket)
+    sizes = {"num_buckets": 8, "bucket_capacity": rows,
+             "probe_capacity": rows}
+    for name, (ka, kb) in distributions(rng, rows).items():
+        a = {"k": ka,
+             "v": rng.integers(-100, 100, rows).astype(np.float32)}
+        b = {"k": kb,
+             "v": rng.integers(-100, 100, rows // 2).astype(np.float32)}
+
+        got = {}
+        for impl in ("sortmerge", "hash"):
+            ga = D.distribute_table(ctx, a, capacity_per_shard=cap)
+            gv = D.distribute_table(ctx, b, capacity_per_shard=cap)
+            pipe = D.DistributedPipeline(
+                ctx, lambda c, x, y, impl=impl: D.dist_isin(
+                    c, x, "k", y, "k", overcommit=4.0, local_impl=impl,
+                    semi_sizes=(sizes if impl == "hash" else None)))
+            out, dropped = pipe(ga, gv)
+            assert int(np.max(np.asarray(dropped))) == 0, (name, impl)
+            got[impl] = D.collect_table(ctx, out)
+        for c in got["sortmerge"]:
+            np.testing.assert_array_equal(
+                got["sortmerge"][c], got["hash"][c],
+                err_msg=f"isin {name}/{c}")
+        mask = np_isin(a, "k", b, "k")
+        want = {c: np.asarray(v)[mask] for c, v in a.items()}
+        assert as_sets(got["hash"]) == as_sets(want), f"isin {name}"
+        print(f"isin {name}: ok ({int(mask.sum())} rows kept)",
+              flush=True)
+
+        for op, dist_fn, oracle in (
+                ("intersect", D.dist_intersect, np_intersect),
+                ("difference", D.dist_difference, np_difference)):
+            got = {}
+            for impl in ("sortmerge", "hash"):
+                ga = D.distribute_table(ctx, a, capacity_per_shard=cap)
+                gb = D.distribute_table(ctx, b, capacity_per_shard=cap)
+                pipe = D.DistributedPipeline(
+                    ctx, lambda c, x, y, impl=impl, fn=dist_fn: fn(
+                        c, x, y, ["k"], overcommit=4.0, local_impl=impl,
+                        semi_sizes=(sizes if impl == "hash" else None)))
+                out, dropped = pipe(ga, gb)
+                assert int(np.max(np.asarray(dropped))) == 0, (name, impl)
+                got[impl] = D.collect_table(ctx, out)
+            for c in got["sortmerge"]:
+                np.testing.assert_array_equal(
+                    got["sortmerge"][c], got["hash"][c],
+                    err_msg=f"{op} {name}/{c}")
+            assert as_sets(got["hash"]) == as_sets(oracle(a, b, ["k"])), \
+                f"{op} {name}"
+            print(f"{op} {name}: ok ({len(got['hash']['k'])} rows)",
+                  flush=True)
+    print("SETOP CONFORMANCE PASSED")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -128,6 +128,56 @@ def np_drop_duplicates(data: dict, subset) -> dict:
     return {c: np.asarray(v)[order] for c, v in data.items()}
 
 
+def _key_rows(data: dict, on):
+    """Rows of the ``on`` columns as float64 tuples — the promoted-dtype
+    comparison the engine uses (exact for test-scale int32/float32
+    values), so an int32 3 and a float32 3.0 are the *same* key while a
+    float32 3.7 is not."""
+    on = list(on)
+    n = len(np.asarray(data[on[0]]))
+    return [tuple(float(np.asarray(data[k])[i]) for k in on)
+            for i in range(n)]
+
+
+def np_isin(data: dict, col: str, values: dict, values_col: str):
+    """Membership-mask oracle: per row of ``data``, is its ``col`` value
+    present among ``values[values_col]`` — compared as float64 (the
+    promoted common dtype), pandas ``df[col].isin(vals)`` semantics."""
+    vals = {float(v) for v in np.asarray(values[values_col]).tolist()}
+    return np.asarray([float(v) in vals
+                       for v in np.asarray(data[col]).tolist()])
+
+
+def np_difference(a: dict, b: dict, on) -> dict:
+    """Difference oracle: rows of ``a`` (all occurrences, original row
+    order) whose ``on`` key has no match in ``b`` — the engine's stable
+    row-compaction contract."""
+    bkeys = set(_key_rows(b, on))
+    keep = [i for i, k in enumerate(_key_rows(a, on)) if k not in bkeys]
+    return {c: np.asarray(v)[keep] for c, v in a.items()}
+
+
+def np_intersect(a: dict, b: dict, on) -> dict:
+    """Intersect oracle: distinct ``on`` keys of ``a`` present in ``b``,
+    canonical output — one row per distinct key (keep-first payload),
+    sorted by key — matching the engine's dedup contract."""
+    bkeys = set(_key_rows(b, on))
+    akeys = _key_rows(a, on)
+    keep = [i for i, k in enumerate(akeys) if k in bkeys]
+    kept = {c: np.asarray(v)[keep] for c, v in a.items()}
+    return np_drop_duplicates(kept, on) if keep else \
+        {c: np.asarray(v)[:0] for c, v in a.items()}
+
+
+def np_union(a: dict, b: dict, on) -> dict:
+    """Union oracle: concat (``a`` first, so its rows win keep-first ties)
+    + drop_duplicates on the ``on`` keys, canonical sorted-by-key
+    output."""
+    cat = {c: np.concatenate([np.asarray(a[c]), np.asarray(b[c])])
+           for c in a}
+    return np_drop_duplicates(cat, on)
+
+
 def np_standard_scale(data: dict, cols) -> dict:
     """StandardScaler oracle: (x - mean) / sqrt(var + 1e-12) per column,
     population variance, float64 accumulation (sklearn/pandas

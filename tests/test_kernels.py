@@ -287,6 +287,55 @@ def test_bucket_probe_ignores_unoccupied_slots():
 
 
 # --------------------------------------------------------------------------
+# hash_semi bucketed membership kernel
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,K,Lc,C", [
+    (1, 1, 8, 8), (4, 1, 16, 32), (8, 2, 32, 16), (16, 3, 64, 64),
+    (3, 2, 128, 8),
+])
+def test_bucket_member_interpret_matches_ref(B, K, Lc, C):
+    from repro.kernels.hash_semi.kernel import bucket_member_buckets
+    from repro.kernels.hash_semi.ref import bucket_member_ref
+
+    pbits, pocc, bbits, bocc = _probe_slabs(B, K, Lc, C, B * 173 + Lc)
+    m_ref = bucket_member_ref(pbits, pocc, bbits, bocc)
+    m_k = bucket_member_buckets(pbits, pocc, bbits, bocc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_ref))
+
+
+def test_bucket_member_ignores_unoccupied_slots():
+    from repro.kernels.hash_semi.ref import bucket_member_ref
+
+    # probe slot 1 is empty -> never a member even though its bits match;
+    # build slot 1 is empty -> key 2 has no occupied build match
+    pbits = jnp.asarray(np.array([[[1, 1, 2]]], np.int32))
+    bbits = jnp.asarray(np.array([[[1, 2, 3]]], np.int32))
+    pocc = jnp.asarray(np.array([[1, 0, 1]], np.int32))
+    bocc = jnp.asarray(np.array([[1, 0, 1]], np.int32))
+    member = bucket_member_ref(pbits, pocc, bbits, bocc)
+    np.testing.assert_array_equal(np.asarray(member), [[1, 0, 0]])
+
+
+def test_bucket_member_requires_all_key_planes_equal():
+    from repro.kernels.hash_semi.ref import bucket_member_ref
+
+    # two key columns: probes (1,2),(5,2) vs builds (1,3),(4,2) — a
+    # half-matching key pair is NOT a member; builds (4,3),(1,2) then
+    # match probe (1,2) only
+    pbits = jnp.asarray(np.array([[[1, 5], [2, 2]]], np.int32))
+    bbits = jnp.asarray(np.array([[[1, 4], [3, 2]]], np.int32))
+    pocc = jnp.ones((1, 2), jnp.int32)
+    bocc = jnp.ones((1, 2), jnp.int32)
+    member = bucket_member_ref(pbits, pocc, bbits, bocc)
+    np.testing.assert_array_equal(np.asarray(member), [[0, 0]])
+    bbits2 = jnp.asarray(np.array([[[4, 1], [3, 2]]], np.int32))
+    member2 = bucket_member_ref(pbits, pocc, bbits2, bocc)
+    np.testing.assert_array_equal(np.asarray(member2), [[1, 0]])
+
+
+# --------------------------------------------------------------------------
 # flash attention kernel
 # --------------------------------------------------------------------------
 

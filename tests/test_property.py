@@ -197,6 +197,64 @@ def test_union_with_self_is_dedup(t):
     assert as_sets(u) == as_sets(d)
 
 
+@given(mixed_key_tables(), mixed_key_tables())
+def test_semi_backends_bit_identical_mixed_keys(a, b):
+    """The semi-join backends on mixed-dtype (int32, float32) multi-key
+    tables: the sortmerge and hash membership masks are bit-identical
+    over the FULL capacity (padding rows are never members), and
+    intersect/difference/union outputs match bit-for-bit."""
+    on = ["ik", "fk"]
+    ms = L.semi_mask(a, b, on, impl="sortmerge")
+    mh, over = L.semi_mask(a, b, on, impl="hash", return_overflow=True)
+    assert int(over) == 0
+    np.testing.assert_array_equal(np.asarray(ms), np.asarray(mh))
+    assert not np.asarray(ms)[int(a.nvalid):].any()
+    for op in ("intersect", "difference"):
+        s = getattr(L, op)(a, b, on=on, impl="sortmerge")
+        h = getattr(L, op)(a, b, on=on, impl="hash")
+        assert int(s.nvalid) == int(h.nvalid), op
+        sn, hn = s.to_numpy(), h.to_numpy()
+        for c in sn:
+            assert sn[c].dtype == hn[c].dtype, (op, c)
+            np.testing.assert_array_equal(sn[c], hn[c],
+                                          err_msg=f"{op} {c}")
+    us = L.union(a, b, on=on, impl="sort").to_numpy()
+    uh = L.union(a, b, on=on, impl="hash").to_numpy()
+    for c in us:
+        np.testing.assert_array_equal(us[c], uh[c],
+                                      err_msg=f"union {c}")
+
+
+@given(mixed_key_tables(), mixed_key_tables())
+def test_intersect_difference_partition_mixed_keys(a, b):
+    """difference(a,b) ⊎ semijoin(a,b) == a (as row multisets) on
+    mixed-dtype multi-key tables — for BOTH semi backends."""
+    an = a.to_numpy()
+    rows = as_sets(an)
+    for impl in ("sortmerge", "hash"):
+        mask = np.asarray(L.semi_mask(a, b, ["ik", "fk"],
+                                      impl=impl))[:int(a.nvalid)]
+        inside = as_sets({c: v[mask] for c, v in an.items()})
+        d = L.difference(a, b, on=["ik", "fk"], impl=impl).to_numpy()
+        assert sorted(inside + as_sets(d)) == rows, impl
+
+
+@given(mixed_key_tables(), mixed_key_tables())
+def test_union_matches_dedup_oracle_mixed_keys(a, b):
+    """union(a, b, on) == drop_duplicates(concat(a, b), on): keep-first
+    canonical output, a's rows winning key ties."""
+    from oracles import np_drop_duplicates
+
+    an, bn = a.to_numpy(), b.to_numpy()
+    cat = {c: np.concatenate([an[c], bn[c]]) for c in an}
+    want = np_drop_duplicates(cat, ["ik", "fk"])
+    got = L.union(a, b, on=["ik", "fk"]).to_numpy()
+    for c in want:
+        np.testing.assert_array_equal(got[c],
+                                      want[c].astype(got[c].dtype),
+                                      err_msg=c)
+
+
 @given(tables())
 def test_concat_counts_add(t):
     out = L.concat(t, t)
