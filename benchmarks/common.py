@@ -46,9 +46,29 @@ class Reporter:
         if os.path.exists(path):
             with open(path) as f:
                 existing = json.load(f)
-        existing = [r for r in existing if r.get("bench") != self.name]
+        # replace per (bench, config, metric, rows) row — not the whole
+        # bench — so a --fast run refreshes its own (smaller-``rows``)
+        # rows without wiping the full-size baselines the perf gate
+        # compares against (and vice versa)
+        fresh = {row_key(r) for r in self.rows}
+        existing = [r for r in existing if row_key(r) not in fresh]
         with open(path, "w") as f:
             json.dump(existing + self.rows, f, indent=1)
+
+
+def row_key(r: dict) -> tuple:
+    """Identity of a bench.json row: same bench/config/metric at the same
+    problem size."""
+    return (r.get("bench"), r.get("config"), r.get("metric"),
+            r.get("rows"))
+
+
+def load_results() -> list[dict]:
+    path = os.path.join(RESULTS, "bench.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
 
 
 def run_subprocess_bench(script: str, n_devices: int, *args,

@@ -1,33 +1,46 @@
 """Benchmark driver: one bench per paper table/figure + kernels + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAMES]
+                                            [--check-budgets]
 
 Prints ``bench,config,metric,value`` CSV rows and writes
-results/bench.json.  Figure map:
+results/bench.json.  ``--only`` takes a comma-separated subset.  Figure
+map:
 
     fig4   distributed join scaling            (paper Fig. 4)
     groupby  local groupby backend sweep       (sort vs bucketed hash)
     sort   local OrderBy backend sweep         (xla vs multi-pass radix)
     setops local semi-join backend sweep       (sortmerge vs hash probe)
+    outofcore  morsel-driven join/groupby past device memory (10M+ rows)
     fig12  sequential data engineering         (paper Fig. 12)
     fig13  data-parallel data engineering      (paper Figs. 13-15)
     fig16  DDP deep learning on CPU            (paper Figs. 16/17)
     kernels  Pallas kernel micro-benchmarks
     roofline per-(arch×cell×mesh) roofline table (assignment §Roofline)
+
+Perf-regression gate: ``--check-budgets`` snapshots the committed
+``results/bench.json`` timings as per-row budgets *before* running,
+re-runs the selected benches, and fails (exit 1) if any ``seconds`` row
+regresses past ``--budget-factor`` (default 1.5x) its budget.  Rows are
+matched by (bench, config, metric, rows), so a ``--fast`` gate run only
+compares against committed fast-size baselines.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
 from . import (bench_dataparallel_de, bench_ddp_train, bench_groupby,
-               bench_join, bench_kernels, bench_roofline,
+               bench_join, bench_kernels, bench_outofcore, bench_roofline,
                bench_sequential_de, bench_setops, bench_sort)
+from .common import load_results, row_key
 
 BENCHES = {
     "fig4": bench_join.run,
     "groupby": bench_groupby.run,
     "sort": bench_sort.run,
     "setops": bench_setops.run,
+    "outofcore": bench_outofcore.run,
     "fig12": bench_sequential_de.run,
     "fig13": bench_dataparallel_de.run,
     "fig16": bench_ddp_train.run,
@@ -36,17 +49,65 @@ BENCHES = {
 }
 
 
+def check_budgets(budgets: dict, factor: float) -> list[str]:
+    """Compare the saved ``seconds`` rows against the snapshotted budgets;
+    rows a bench didn't re-run compare equal and pass trivially.  Returns
+    the regression report lines."""
+    failures = []
+    checked = 0
+    for r in load_results():
+        if r.get("metric") != "seconds":
+            continue
+        budget = budgets.get(row_key(r))
+        if budget is None or budget <= 0:
+            continue                      # new row: no budget yet
+        checked += 1
+        if r["value"] > factor * budget:
+            failures.append(
+                f"  {r['bench']}/{r['config']} (rows={r.get('rows')}): "
+                f"{r['value']:.3f}s vs budget {budget:.3f}s "
+                f"({r['value'] / budget:.2f}x > {factor}x)")
+    print(f"# budget check: {checked} rows checked, "
+          f"{len(failures)} regressions", flush=True)
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes (CI smoke)")
-    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names "
+                         f"(choices: {', '.join(sorted(BENCHES))})")
+    ap.add_argument("--check-budgets", action="store_true",
+                    help="fail (exit 1) if a re-run 'seconds' row "
+                         "regresses past --budget-factor x its committed "
+                         "results/bench.json value")
+    ap.add_argument("--budget-factor", type=float, default=1.5)
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = args.only.split(",")
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; "
+                     f"choices: {', '.join(sorted(BENCHES))}")
+    else:
+        names = list(BENCHES)
+    budgets = {}
+    if args.check_budgets:              # snapshot before benches overwrite
+        budgets = {row_key(r): r["value"] for r in load_results()
+                   if r.get("metric") == "seconds"}
     print("bench,config,metric,value")
     for name in names:
         print(f"# --- {name} ---", flush=True)
         BENCHES[name](fast=args.fast)
+    if args.check_budgets:
+        failures = check_budgets(budgets, args.budget_factor)
+        if failures:
+            print("PERF BUDGET EXCEEDED:", flush=True)
+            print("\n".join(failures), flush=True)
+            sys.exit(1)
+        print("# budget check passed", flush=True)
 
 
 if __name__ == "__main__":

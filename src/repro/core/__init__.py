@@ -4,9 +4,11 @@ This is the paper's primary contribution realized in JAX: columnar tables
 with static capacity (table.py), the paper's Table-2 local operators
 (local_ops.py), and the Table-4/5 distributed operators -- communication
 composed with local operators under the BSP execution model
-(dist_ops.py + context.py).
+(dist_ops.py + context.py).  Out-of-core, morsel-driven chunked
+execution over the same operators lives in morsel.py.
 """
 from .table import Table, INT_NULL, FLOAT_NULL  # noqa: F401
 from .context import HptmtContext, make_context  # noqa: F401
 from . import local_ops  # noqa: F401
 from . import dist_ops  # noqa: F401
+from . import morsel  # noqa: F401

@@ -45,6 +45,17 @@ from one sender to one receiver and materialize at most ``out_capacity``
 rows per receiver.  Overflowing rows are dropped and *counted* (returned as
 a metric) — tests and callers size capacities so overflow is zero;
 production configs use ``overcommit`` headroom (default 2x).
+
+Chunked-execution contract: tables larger than device memory run through
+``core/morsel.py``, which streams fixed-capacity host-side chunks
+through :func:`distribute_table` and loops them over these same
+operators — join with a device-resident (or re-streamed) build side,
+groupby as partial aggregates folded through
+``local_ops.merge_partial_aggregates``, sort as per-chunk sample-sort
+runs k-way-merged on the host.  Each chunk re-enters one cached
+:class:`DistributedPipeline` program (same static shapes every morsel),
+and the per-chunk overflow counters aggregate into one across-chunks
+total, so the counted-overflow contract survives chunking unchanged.
 """
 from __future__ import annotations
 
@@ -63,7 +74,7 @@ from .context import HptmtContext, shard_map
 from .kernel_backend import radix_impl
 from .kernel_backend import sort_impl as _default_sort_impl
 from .partition import hash_columns, partition_ids
-from .table import Table
+from .table import Table, narrow_column as _narrow_column
 from ..kernels.hash_partition import radix_histogram_ranks
 from ..kernels.radix_sort import radix_permutation, stable_partition_perm
 
@@ -79,12 +90,25 @@ def distribute_table(ctx: HptmtContext, data: Mapping[str, np.ndarray],
     Rows are block-distributed over the row axes (the paper's row
     decomposition).  The global table's ``nvalid`` is a ``(world,)`` vector
     of per-shard counts.
+
+    Columns follow the engine dtype contract (``core/table.py``):
+    floats narrow to float32; integer values outside the int32 range
+    *raise* instead of truncating (aliased key bits would fabricate join
+    matches).  ``capacity_per_shard=None`` means rows-per-shard; an
+    explicit non-positive capacity is an error, never silently coerced.
     """
     world = ctx.world_size
     arrays = {k: np.asarray(v) for k, v in data.items()}
     n = len(next(iter(arrays.values())))
     per = math.ceil(n / world) if n else 1
-    cap = capacity_per_shard or per
+    if capacity_per_shard is None:
+        cap = per
+    else:
+        if capacity_per_shard <= 0:
+            raise ValueError(
+                f"capacity_per_shard must be positive, got "
+                f"{capacity_per_shard} (pass None for rows-per-shard)")
+        cap = capacity_per_shard
     if cap < per:
         raise ValueError(f"capacity_per_shard {cap} < rows/shard {per}")
     cols, nvalid = {}, np.zeros((world,), np.int32)
@@ -92,10 +116,7 @@ def distribute_table(ctx: HptmtContext, data: Mapping[str, np.ndarray],
         lo, hi = min(s * per, n), min((s + 1) * per, n)
         nvalid[s] = hi - lo
     for k, v in arrays.items():
-        if np.issubdtype(v.dtype, np.floating):
-            v = v.astype(np.float32)
-        else:
-            v = v.astype(np.int32)
+        v = _narrow_column(k, v)
         buf = np.zeros((world, cap), v.dtype)
         for s in range(world):
             lo, hi = min(s * per, n), min((s + 1) * per, n)
@@ -521,12 +542,20 @@ class DistributedPipeline:
     leaves (e.g. the ``dropped`` counters) are auto-lifted to a leading
     per-shard axis of size 1 and come back stacked ``(world,)``; other
     arrays must already carry a leading per-shard axis.
+
+    The jitted program is built once per instance and reused across calls
+    (kwarg-free calls only — kwargs close over the trace, so a call with
+    kwargs rebuilds).  Chunk loops (``core/morsel.py``) rely on this:
+    every morsel re-enters the *same* compiled executable, so the
+    per-chunk cost is execution, not tracing.
     """
 
     ctx: HptmtContext
     fn: Callable
+    _jitted: Callable | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
-    def __call__(self, *tables: Table, **kwargs):
+    def _build(self, **kwargs):
         ctx = self.ctx
         spec = ctx.rows_spec
 
@@ -545,4 +574,11 @@ class DistributedPipeline:
         # `spec` is a valid pytree *prefix* for the whole in/out trees
         f = shard_map(wrapped, mesh=ctx.mesh, in_specs=spec,
                       out_specs=spec)
-        return jax.jit(f)(*tables)
+        return jax.jit(f)
+
+    def __call__(self, *tables: Table, **kwargs):
+        if kwargs:
+            return self._build(**kwargs)(*tables)
+        if self._jitted is None:
+            self._jitted = self._build()
+        return self._jitted(*tables)

@@ -155,6 +155,35 @@ def concat(a: Table, b: Table) -> Table:
     return Table(columns=cols, nvalid=a.nvalid + b.nvalid)
 
 
+def append_rows(acc: Table, t: Table):
+    """Append ``t``'s valid rows after ``acc``'s, *keeping acc's static
+    capacity* (unlike :func:`concat`, which grows it).
+
+    The fixed-capacity accumulator op behind the morsel-driven chunk
+    loops (``core/morsel.py``): under ``jit`` the accumulator's shape
+    never changes, so every chunk iteration reuses one compiled program.
+    Rows past ``acc.capacity`` are dropped and **counted** — the same
+    counted-overflow contract as the shuffle — and the count is returned:
+    ``(appended, dropped)``.
+    """
+    if set(acc.names) != set(t.names):
+        raise ValueError(f"schema mismatch: {acc.names} vs {t.names}")
+    cap = acc.capacity
+    i = jnp.arange(t.capacity, dtype=jnp.int32)
+    slot = acc.nvalid + i
+    ok = (i < t.nvalid) & (slot < cap)
+    flat = jnp.where(ok, slot, cap)
+    cols = {}
+    for n in acc.names:
+        src = t.columns[n].astype(acc.columns[n].dtype)
+        buf = jnp.concatenate(
+            [acc.columns[n], jnp.zeros((1,), acc.columns[n].dtype)])
+        cols[n] = buf.at[flat].set(src)[:cap]
+    total = acc.nvalid + t.nvalid
+    out = Table(columns=cols, nvalid=jnp.minimum(total, cap))
+    return out, jnp.maximum(total - cap, 0)
+
+
 # --------------------------------------------------------------------------
 # OrderBy (sort_values)
 # --------------------------------------------------------------------------
@@ -551,6 +580,89 @@ def _hash_groupby(table: Table, by: list, aggs: Mapping[str, list],
                                   final, cap)
             out_cols[f"{col_name}_{op}"] = v
     return Table(columns=out_cols, nvalid=ngroups), plan.dropped
+
+
+# merge rule per partial-aggregate column suffix: how two partials of the
+# same group combine into the partial of their union
+_PARTIAL_MERGE = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+
+
+def partial_agg_columns(aggs: Mapping[str, Sequence[str] | str]):
+    """Expand requested aggregations to the *partial* set that chunked
+    (morsel) execution accumulates: ``mean`` needs ``sum`` + ``count``,
+    everything else is its own partial.  Returns ``{col: [partial ops]}``
+    in canonical (sum, count, min, max) order."""
+    out: dict[str, list] = {}
+    for col, ops in aggs.items():
+        ops = [ops] if isinstance(ops, str) else list(ops)
+        need = set()
+        for op in ops:
+            if op not in _AGGS:
+                raise ValueError(f"unknown aggregation {op!r}")
+            need.update(("sum", "count") if op == "mean" else (op,))
+        out[col] = [op for op in ("sum", "count", "min", "max")
+                    if op in need]
+    return out
+
+
+def merge_partial_aggregates(acc: Table, part: Table, by: Sequence[str], *,
+                             impl: str | None = None,
+                             return_overflow: bool = False,
+                             num_buckets: int | None = None,
+                             bucket_capacity: int | None = None,
+                             kernel_impl: str | None = None):
+    """Merge two canonical partial-aggregate tables into one with
+    ``acc``'s capacity — the associative combine step of morsel-driven
+    groupby (``core/morsel.py``).
+
+    Both inputs carry the ``by`` key columns plus partial columns named
+    ``{col}_{op}`` with ``op`` in sum/count/min/max (the shape
+    :func:`groupby_aggregate` emits, see :func:`partial_agg_columns`).
+    Equal keys combine through the matching merge reduction — sum of
+    sums, sum of counts, min of mins, max of maxs — by re-running the
+    pluggable aggregation backend (``impl`` = 'sort' | 'hash': the merge
+    reuses the existing hash-groupby slabs, no new kernel) over the
+    concatenation, so the output is again canonical (one row per key,
+    key-sorted) and the merge is associative: any chunking of the input
+    rows folds to the same table.
+
+    Counts stay exact int32 (the float32 re-sum is exact below 2^24 rows
+    per group — the engine's whole-table capacity bound is int32, and
+    per-chunk partial counts are bounded by chunk capacity).  Groups past
+    ``acc.capacity`` (and hash-slab overflow under ``impl='hash'``) are
+    dropped and **counted**: ``return_overflow=True`` returns
+    ``(merged, dropped)``.
+    """
+    by = list(by)
+    t = concat(acc, part)
+    merge_op: dict[str, str] = {}
+    for name in acc.names:
+        if name in by:
+            continue
+        _, _, suffix = name.rpartition("_")
+        if suffix not in _PARTIAL_MERGE:
+            raise ValueError(
+                f"column {name!r} is not a partial-aggregate column "
+                "(expected a _sum/_count/_min/_max suffix)")
+        merge_op[name] = _PARTIAL_MERGE[suffix]
+    g, over = groupby_aggregate(t, by, {n: [op] for n, op in
+                                        merge_op.items()},
+                                impl=impl, return_overflow=True,
+                                num_buckets=num_buckets,
+                                bucket_capacity=bucket_capacity,
+                                kernel_impl=kernel_impl)
+    cap = acc.capacity
+    cols = {k: g.columns[k][:cap] for k in by}
+    for name, op in merge_op.items():
+        v = g.columns[f"{name}_{op}"][:cap]
+        if name.endswith("_count"):
+            v = v.astype(jnp.int32)
+        cols[name] = v
+    out = Table(columns=cols, nvalid=jnp.minimum(g.nvalid, cap))
+    dropped = over + jnp.maximum(g.nvalid - cap, 0)
+    if return_overflow:
+        return out, dropped
+    return out
 
 
 def aggregate(table: Table, col: str, op: str) -> jax.Array:

@@ -18,6 +18,23 @@ Representation invariants
 Strings are dictionary-encoded to int32 ids *before* entering the engine
 (TPUs have no string type; Arrow dictionary encoding is the standard
 equivalent) — see ``repro.data.dictionary``.
+
+Column dtype contract
+---------------------
+The engine stores exactly two column dtypes (the TPU-native 32-bit
+lanes): **int32** for integer/bool columns and **float32** for float
+columns.  Ingestion (:meth:`Table.from_dict`,
+``dist_ops.distribute_table``, ``morsel.ChunkedTable``) narrows wider
+inputs through :func:`narrow_column`:
+
+* ``float64 -> float32`` silently (precision loss only, ordering and
+  equality of representable values survive);
+* integer values **must fit int32** — out-of-range values *raise*
+  instead of truncating.  Truncation is not a precision issue: two
+  distinct int64 keys 2^32 apart alias to the same int32 bits, which
+  turns into *false join matches* downstream.  Callers with wider keys
+  dictionary-encode them first (``repro.data.dictionary``), same as
+  strings.
 """
 from __future__ import annotations
 
@@ -30,6 +47,33 @@ import numpy as np
 
 INT_NULL = np.iinfo(np.int32).min
 FLOAT_NULL = np.nan
+
+
+def narrow_column(name: str, v: np.ndarray) -> np.ndarray:
+    """Narrow an ingested numpy column to the engine dtype contract
+    (int32 / float32 — see the module docstring).
+
+    Floats narrow silently; integer/bool values outside the int32 range
+    raise ``ValueError`` instead of truncating (aliased key bits make
+    false join matches, never a recoverable precision loss)."""
+    if np.issubdtype(v.dtype, np.floating):
+        return v.astype(np.float32)
+    if np.issubdtype(v.dtype, np.integer) or v.dtype == np.bool_:
+        if v.dtype != np.int32 and v.size:
+            info = np.iinfo(np.int32)
+            lo, hi = v.min(), v.max()
+            if lo < info.min or hi > info.max:
+                raise ValueError(
+                    f"column {name!r} ({v.dtype}) has values in "
+                    f"[{lo}, {hi}] outside the int32 range "
+                    f"[{info.min}, {info.max}]; refusing to truncate "
+                    "(aliased keys make false join matches) — "
+                    "dictionary-encode wide keys first "
+                    "(repro.data.dictionary)")
+        return v.astype(np.int32)
+    raise TypeError(
+        f"column {name!r} dtype {v.dtype} unsupported; dictionary-"
+        "encode strings first (repro.data.dictionary)")
 
 
 def _is_float(x) -> bool:
@@ -95,16 +139,8 @@ class Table:
             raise ValueError(f"capacity {cap} < number of rows {n}")
         cols = {}
         for k, v in arrays.items():
-            if np.issubdtype(v.dtype, np.floating):
-                v = v.astype(np.float32)
-                pad = np.zeros(cap - n, np.float32)
-            elif np.issubdtype(v.dtype, np.integer) or v.dtype == np.bool_:
-                v = v.astype(np.int32)
-                pad = np.zeros(cap - n, np.int32)
-            else:
-                raise TypeError(
-                    f"column {k!r} dtype {v.dtype} unsupported; dictionary-"
-                    "encode strings first (repro.data.dictionary)")
+            v = narrow_column(k, v)
+            pad = np.zeros(cap - n, v.dtype)
             cols[k] = jnp.asarray(np.concatenate([v, pad]))
         return cls(columns=cols, nvalid=jnp.int32(n))
 

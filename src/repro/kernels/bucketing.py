@@ -120,7 +120,7 @@ def default_bucket_count(capacity: int) -> int:
 
 
 def plan_bucket_sizes(key_cols, num_buckets: int | None = None, *,
-                      headroom: float = 1.0, min_capacity: int = 8):
+                      headroom: float = 1.25, min_capacity: int = 8):
     """Two-pass (histogram, then size) bucket planner -> ``(num_buckets,
     slab_capacity)`` static sizes that are *distribution-proof* for the
     given keys.
@@ -132,9 +132,12 @@ def plan_bucket_sizes(key_cols, num_buckets: int | None = None, *,
     the same ``bucket_ids`` hash the kernels use, pass 2 sizes the slab to
     the observed maximum bucket load (times ``headroom``, rounded up to a
     multiple of 8 for lane alignment) — the overflow counter is then zero
-    by construction for these keys.  Callers under ``jit``/``shard_map``
-    can't plan (the keys are traced); they keep the heuristic or pass
-    explicit sizes.
+    by construction for these keys.  The default ``headroom`` keeps a
+    small cushion above the observed max so a plan *reused* on slightly
+    different keys (one more duplicate of the hottest key, the next chunk
+    of the same stream) still fits; ``headroom=1.0`` sizes exactly to the
+    observed keys.  Callers under ``jit``/``shard_map`` can't plan (the
+    keys are traced); they keep the heuristic or pass explicit sizes.
     """
     cols = [np.asarray(c) for c in key_cols]
     n = int(cols[0].shape[0]) if cols else 0

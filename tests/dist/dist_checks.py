@@ -203,6 +203,88 @@ def check_setops(ctx, rng, local_impl):
     print(f"dist_intersect/difference[{local_impl}] ok")
 
 
+def check_morsel(ctx, rng):
+    """Out-of-core chunk loops at world 8: chunked == monolithic."""
+    from repro.core import morsel as M
+    rows, nkeys, chunk = 960, 64, 160
+    data = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+            "v": rng.integers(-50, 50, rows).astype(np.float32)}
+    right = {"k": np.arange(nkeys, dtype=np.int32),
+             "w": rng.integers(0, 9, nkeys).astype(np.float32)}
+    cap = (rows // WORLD) * 2
+    g = D.distribute_table(ctx, data, capacity_per_shard=cap)
+    gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+
+    out, dropped = M.chunked_dist_join(ctx, M.ChunkedTable(data, chunk),
+                                       right, left_on=["k"],
+                                       out_capacity_per_shard=1024,
+                                       overcommit=4.0)
+    assert dropped == 0
+    mono, md = D.DistributedPipeline(
+        ctx, lambda c, a, b: D.dist_join(c, a, b, left_on=["k"],
+                                         out_capacity=1024,
+                                         overcommit=4.0))(g, gr)
+    assert int(np.max(np.asarray(md))) == 0
+    mono = D.collect_table(ctx, mono)
+    assert as_sets(out) == as_sets(mono)
+    print(f"morsel join ok ({len(out['k'])} rows)")
+
+    cg, cgd = M.chunked_dist_groupby(ctx, M.ChunkedTable(data, chunk),
+                                     ["k"], {"v": ["sum", "mean"]},
+                                     group_capacity_per_shard=nkeys,
+                                     overcommit=4.0)
+    assert cgd == 0
+    mg, mgd = D.DistributedPipeline(
+        ctx, lambda c, t: D.dist_groupby(c, t, ["k"],
+                                         {"v": ["sum", "mean"]},
+                                         overcommit=4.0))(g)
+    assert int(np.max(np.asarray(mgd))) == 0
+    mg = D.collect_table(ctx, mg)
+    for k in mg:
+        np.testing.assert_array_equal(cg[k], mg[k], err_msg=k)
+    print("morsel groupby bit-identical ok")
+
+    cs, csd = M.chunked_dist_sort(ctx, M.ChunkedTable(data, chunk), ["k"],
+                                  overcommit=4.0)
+    assert csd == 0
+    ms, msd = D.DistributedPipeline(
+        ctx, lambda c, t: D.dist_sort(c, t, ["k"], overcommit=4.0))(g)
+    assert int(np.max(np.asarray(msd))) == 0
+    ms = D.collect_table(ctx, ms)
+    for k in ms:
+        np.testing.assert_array_equal(cs[k], ms[k], err_msg=k)
+    print("morsel sort bit-identical ok")
+
+
+def check_empty_shards(ctx, rng):
+    """Zero-row and fewer-rows-than-shards tables through the operators."""
+    for n in (0, 3):                  # 3 rows over 8 shards: 5 empty
+        data = {"k": rng.integers(0, 5, n).astype(np.int32),
+                "v": rng.normal(size=n).astype(np.float32)}
+        t = D.distribute_table(ctx, data, capacity_per_shard=8)
+        v = D.distribute_table(ctx, data, capacity_per_shard=8)
+        out, dropped = D.DistributedPipeline(
+            ctx, lambda c, a, b: D.dist_join(
+                c, a, b, left_on=["k"], out_capacity=64,
+                overcommit=4.0))(t, v)
+        assert int(np.max(np.asarray(dropped))) == 0
+        t = D.distribute_table(ctx, data, capacity_per_shard=8)
+        out, dropped = D.DistributedPipeline(
+            ctx, lambda c, a: D.dist_groupby(c, a, ["k"], {"v": "sum"},
+                                             overcommit=4.0))(t)
+        assert int(np.max(np.asarray(dropped))) == 0
+        got = D.collect_table(ctx, out)
+        assert len(got["k"]) == len(np.unique(data["k"]))
+        t = D.distribute_table(ctx, data, capacity_per_shard=8)
+        out, dropped = D.DistributedPipeline(
+            ctx, lambda c, a: D.dist_sort(c, a, ["k"],
+                                          overcommit=4.0))(t)
+        assert int(np.max(np.asarray(dropped))) == 0
+        got = D.collect_table(ctx, out)
+        np.testing.assert_array_equal(got["k"], np.sort(data["k"]))
+    print("empty/sparse shards ok")
+
+
 def check_repartition(ctx, rng):
     # skewed layout: all rows start on few shards
     data = {"a": np.arange(50, dtype=np.int32)}
@@ -237,6 +319,8 @@ def main():
     check_setops(ctx, rng, "sortmerge")
     check_setops(ctx, rng, "hash")
     check_repartition(ctx, rng)
+    check_morsel(ctx, rng)
+    check_empty_shards(ctx, rng)
     print("DIST CHECKS PASSED")
 
 

@@ -176,6 +176,24 @@ def test_plan_bucket_sizes_covers_actual_max_load():
     assert Ce == 8 and Be >= 1
 
 
+def test_plan_headroom_survives_extra_hot_duplicates():
+    """The default headroom (1.25x observed max load) must keep a plan
+    valid when it's *reused* on slightly different keys — here one extra
+    duplicate of the hottest key (the next chunk of a stream)."""
+    rng = np.random.default_rng(7)
+    keys = _skewed_keys(rng, 600)
+    B, C = bucketing.plan_bucket_sizes([keys])
+    vals, counts = np.unique(keys, return_counts=True)
+    hottest = vals[np.argmax(counts)]
+    aug = np.append(keys, hottest).astype(np.int32)
+    bid = np.asarray(bucketing.bucket_ids(
+        (bucketing.key_bits(jnp.asarray(aug)),), B))
+    assert int(np.bincount(bid, minlength=B).max()) <= C
+    # exact sizing remains available for callers that want it
+    _, C0 = bucketing.plan_bucket_sizes([keys], headroom=1.0)
+    assert C0 <= C
+
+
 def test_planner_makes_skewed_groupby_overflow_free(rng):
     """Above EXACT_SLAB_CAP with heavy key skew: the uniform auto-sizing
     heuristic overflows its hottest bucket (rows dropped and counted);
