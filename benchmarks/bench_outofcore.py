@@ -41,6 +41,24 @@ def run(fast: bool = False):
                 dropped=res["groupby_dropped"])
         rep.add(f"groupby_p{world}", "rows_per_sec",
                 rows / res["groupby_seconds"], rows=rows)
+    # disk-backed probe: same streaming pass with np.memmap columns —
+    # morsels page in from disk as they are sliced (the
+    # truly-larger-than-memory source)
+    world = 2
+    res = run_subprocess_bench("_subproc_outofcore.py", world, world,
+                               rows, chunk, "memmap", timeout=3600)
+    assert res["join_dropped"] == 0 and res["groupby_dropped"] == 0, res
+    assert res["join_out_rows"] == rows, res
+    rep.add(f"join_p{world}_memmap", "seconds", res["join_seconds"],
+            rows=rows, chunk_rows=chunk, chunks=res["chunks"],
+            out_rows=res["join_out_rows"], dropped=res["join_dropped"])
+    rep.add(f"join_p{world}_memmap", "rows_per_sec",
+            rows / res["join_seconds"], rows=rows)
+    rep.add(f"groupby_p{world}_memmap", "seconds",
+            res["groupby_seconds"], rows=rows, chunk_rows=chunk,
+            out_rows=res["groups"], dropped=res["groupby_dropped"])
+    rep.add(f"groupby_p{world}_memmap", "rows_per_sec",
+            rows / res["groupby_seconds"], rows=rows)
     rep.save()
     return rep
 

@@ -1,0 +1,51 @@
+"""End-to-end serving soak: continuous-batching decode fused with
+distributed feature joins.
+
+The engine (``repro/serving``) is soaked with a bursty, Zipf-skewed
+closed-loop load (see ``_subproc_serve.py``): the full ``run()`` pushes
+1000+ requests through the bounded admission queue, the feature-store
+shuffle/join path, slot prefill, and the continuous-batching decode loop
+— asserting zero silent drops (every rejection counted and retried,
+every completed request carries exactly its requested tokens and the
+bit-correct joined feature row) — and records sustained tokens/s,
+feature rows/s, and p50/p99 latency.  ``tokens_per_sec`` /
+``rows_per_sec`` rows are *lower-bound* gated by ``run.py
+--check-budgets`` (a throughput regression fails the gate the same way
+a ``seconds`` regression does).
+"""
+from __future__ import annotations
+
+from .common import Reporter, run_subprocess_bench
+
+REQUESTS = 1200        # acceptance: soak >= 1000 requests
+FAST_REQUESTS = 120
+SLOTS = 4
+PROMPT_CAP = 16
+GEN_CAP = 8
+QUEUE_CAP = 32
+
+
+def run(fast: bool = False):
+    rep = Reporter("serve_e2e")
+    n = FAST_REQUESTS if fast else REQUESTS
+    for world in (1, 2):
+        res = run_subprocess_bench(
+            "_subproc_serve.py", world, world, n, SLOTS, PROMPT_CAP,
+            GEN_CAP, QUEUE_CAP, timeout=3600)
+        assert res["completed"] == n, res
+        cfg = f"soak_p{world}"
+        rep.add(cfg, "seconds", res["seconds"], rows=n,
+                slots=SLOTS, rejected=res["rejected"],
+                decode_steps=res["decode_steps"],
+                tokens=res["tokens_generated"],
+                max_queue_depth=res["max_queue_depth"])
+        rep.add(cfg, "tokens_per_sec", res["tokens_per_sec"], rows=n)
+        rep.add(cfg, "rows_per_sec", res["rows_per_sec"], rows=n)
+        rep.add(cfg, "p50_latency_s", res["p50_latency_s"], rows=n)
+        rep.add(cfg, "p99_latency_s", res["p99_latency_s"], rows=n)
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -17,12 +17,15 @@ map:
     fig16  DDP deep learning on CPU            (paper Figs. 16/17)
     kernels  Pallas kernel micro-benchmarks
     roofline per-(arch×cell×mesh) roofline table (assignment §Roofline)
+    serve  continuous-batching serve soak fused with feature joins
 
 Perf-regression gate: ``--check-budgets`` snapshots the committed
 ``results/bench.json`` timings as per-row budgets *before* running,
 re-runs the selected benches, and fails (exit 1) if any ``seconds`` row
-regresses past ``--budget-factor`` (default 1.5x) its budget.  Rows are
-matched by (bench, config, metric, rows), so a ``--fast`` gate run only
+regresses past ``--budget-factor`` (default 1.5x) its budget, or any
+*throughput* row (``tokens_per_sec`` / ``rows_per_sec`` — lower is
+worse) falls below its budget divided by the factor.  Rows are matched
+by (bench, config, metric, rows), so a ``--fast`` gate run only
 compares against committed fast-size baselines.
 """
 from __future__ import annotations
@@ -32,7 +35,8 @@ import sys
 
 from . import (bench_dataparallel_de, bench_ddp_train, bench_groupby,
                bench_join, bench_kernels, bench_outofcore, bench_roofline,
-               bench_sequential_de, bench_setops, bench_sort)
+               bench_sequential_de, bench_serve_e2e, bench_setops,
+               bench_sort)
 from .common import load_results, row_key
 
 BENCHES = {
@@ -46,27 +50,42 @@ BENCHES = {
     "fig16": bench_ddp_train.run,
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,
+    "serve": bench_serve_e2e.run,
 }
+
+# metrics where lower is WORSE: gated as a lower bound (value must stay
+# above budget / factor), unlike ``seconds`` which gates as an upper
+# bound
+THROUGHPUT_METRICS = ("tokens_per_sec", "rows_per_sec")
 
 
 def check_budgets(budgets: dict, factor: float) -> list[str]:
-    """Compare the saved ``seconds`` rows against the snapshotted budgets;
-    rows a bench didn't re-run compare equal and pass trivially.  Returns
-    the regression report lines."""
+    """Compare the saved ``seconds`` (upper-bound) and throughput
+    (lower-bound) rows against the snapshotted budgets; rows a bench
+    didn't re-run compare equal and pass trivially.  Returns the
+    regression report lines."""
     failures = []
     checked = 0
     for r in load_results():
-        if r.get("metric") != "seconds":
+        metric = r.get("metric")
+        if metric != "seconds" and metric not in THROUGHPUT_METRICS:
             continue
         budget = budgets.get(row_key(r))
         if budget is None or budget <= 0:
             continue                      # new row: no budget yet
         checked += 1
-        if r["value"] > factor * budget:
+        if metric == "seconds":
+            if r["value"] > factor * budget:
+                failures.append(
+                    f"  {r['bench']}/{r['config']} (rows={r.get('rows')}): "
+                    f"{r['value']:.3f}s vs budget {budget:.3f}s "
+                    f"({r['value'] / budget:.2f}x > {factor}x)")
+        elif r["value"] < budget / factor:
             failures.append(
                 f"  {r['bench']}/{r['config']} (rows={r.get('rows')}): "
-                f"{r['value']:.3f}s vs budget {budget:.3f}s "
-                f"({r['value'] / budget:.2f}x > {factor}x)")
+                f"{metric} {r['value']:.1f} vs budget {budget:.1f} "
+                f"({budget / max(r['value'], 1e-9):.2f}x below, "
+                f"> {factor}x allowed)")
     print(f"# budget check: {checked} rows checked, "
           f"{len(failures)} regressions", flush=True)
     return failures
@@ -96,7 +115,8 @@ def main() -> None:
     budgets = {}
     if args.check_budgets:              # snapshot before benches overwrite
         budgets = {row_key(r): r["value"] for r in load_results()
-                   if r.get("metric") == "seconds"}
+                   if r.get("metric") == "seconds"
+                   or r.get("metric") in THROUGHPUT_METRICS}
     print("bench,config,metric,value")
     for name in names:
         print(f"# --- {name} ---", flush=True)

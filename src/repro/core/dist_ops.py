@@ -548,10 +548,21 @@ class DistributedPipeline:
     kwargs rebuilds).  Chunk loops (``core/morsel.py``) rely on this:
     every morsel re-enters the *same* compiled executable, so the
     per-chunk cost is execution, not tracing.
+
+    ``donate_argnums`` donates the corresponding *table* arguments'
+    buffers to the call (``jax.jit`` donation): chunk loops donate the
+    fold accumulator they rebind each iteration — append/merge keeps its
+    static capacity, so XLA writes the fold in place instead of
+    allocating a fresh accumulator per chunk.  Never donate a table the
+    caller reads again (e.g. the resident build side of a probe loop),
+    and don't donate tables whose buffers match no output shape (e.g.
+    per-morsel chunks vs. overcommitted shuffle slabs) — that donation
+    is a warning-generating no-op.
     """
 
     ctx: HptmtContext
     fn: Callable
+    donate_argnums: tuple[int, ...] = ()
     _jitted: Callable | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
@@ -574,7 +585,7 @@ class DistributedPipeline:
         # `spec` is a valid pytree *prefix* for the whole in/out trees
         f = shard_map(wrapped, mesh=ctx.mesh, in_specs=spec,
                       out_specs=spec)
-        return jax.jit(f)
+        return jax.jit(f, donate_argnums=tuple(self.donate_argnums))
 
     def __call__(self, *tables: Table, **kwargs):
         if kwargs:

@@ -247,7 +247,12 @@ def chunked_dist_join(ctx: HptmtContext, left, right, *,
             a2, ad = L.append_rows(a, sh)
             return a2, d + jax.lax.psum(ad, c.row_axes)
 
-        build_pipe = D.DistributedPipeline(ctx, build_step)
+        # donate the accumulator (rebound each iteration) so the append
+        # folds in place — the per-chunk morsel's buffers match no output
+        # shape (the shuffle slab is overcommitted), so donating it would
+        # be a no-op
+        build_pipe = D.DistributedPipeline(ctx, build_step,
+                                           donate_argnums=(0,))
         for g in right.distribute(ctx):
             acc, d = build_pipe(acc, g)
             dropped += _dropped(d)
@@ -260,6 +265,9 @@ def chunked_dist_join(ctx: HptmtContext, left, right, *,
                              **sizes)
             return out, d + jax.lax.psum(jd, c.row_axes)
 
+        # no donation: the resident build side (arg 0) is read again on
+        # every subsequent chunk, and the probe morsel's buffers match no
+        # output shape (join output is sized out_cap, not the morsel cap)
         probe_pipe = D.DistributedPipeline(ctx, probe_step)
         for g in left.distribute(ctx):
             out, d = probe_pipe(acc, g)
@@ -281,6 +289,9 @@ def chunked_dist_join(ctx: HptmtContext, left, right, *,
                          impl=local_impl, return_overflow=True, **sizes)
         return out, jax.lax.psum(jd, c.row_axes)
 
+    # no donation: the shuffled probe morsel (arg 0) is re-joined against
+    # every build morsel, and the build morsel's buffers only match the
+    # join output's shapes by coincidence of chunk sizing
     join_pipe = D.DistributedPipeline(ctx, join_step)
     for pg in left.distribute(ctx):
         psh, d = shuffle_probe(pg)
@@ -349,7 +360,9 @@ def chunked_dist_groupby(ctx: HptmtContext, table, by: Sequence[str],
                                                 return_overflow=True)
         return merged, d1 + jax.lax.psum(d2 + d3, c.row_axes)
 
-    pipe = D.DistributedPipeline(ctx, step)
+    # donate the accumulator (rebound each fold — merge keeps its
+    # capacity, so XLA folds the merge in place)
+    pipe = D.DistributedPipeline(ctx, step, donate_argnums=(0,))
     dropped = 0
     for g in table.distribute(ctx):
         acc, d = pipe(acc, g)

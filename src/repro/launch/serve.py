@@ -1,11 +1,18 @@
-"""Serving launcher: batched prefill + decode with a static KV cache.
+"""Serving launcher: continuous-batching decode fused with feature joins.
 
     PYTHONPATH=src python -m repro.launch.serve --arch lm100m --reduced \
-        [--batch 4] [--prompt-len 32] [--gen 16] [--mesh data=1,model=2]
+        [--requests 32] [--slots 4] [--prompt-len 32] [--gen 16] \
+        [--queue-capacity 64] [--no-features] [--mesh data=1,model=2]
 
-Runs continuous batched greedy decoding and reports tokens/s.  The same
-``serve_step`` is what the decode_32k / long_500k dry-run cells lower on
-the production mesh.
+Thin CLI over :class:`repro.serving.ServingEngine`: generates a stream of
+requests (random prompts of *heterogeneous* lengths, each carrying
+drug/cell feature keys), submits them through the bounded admission
+queue, and runs the engine until drained — continuous batching refills
+freed decode slots while the rest of the batch keeps generating, and
+every request's keys resolve against UNOMT feature tables through the
+distributed join path before its prompt enters a slot.  Prints the full
+metrics snapshot (counters / gauges / latency summaries) and asserts the
+accounting identity: submitted == completed + rejected + feature_misses.
 """
 import argparse
 import os
@@ -13,32 +20,56 @@ import sys
 import time
 
 
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int, module: str) -> None:
+    """Re-exec with ``XLA_FLAGS`` requesting ``n`` host devices — *merging*
+    with any flags already set (replacing a stale device-count flag,
+    keeping everything else) instead of skipping when ``XLA_FLAGS``
+    exists.  No-op (so the re-exec terminates) once the flag is right."""
+    want = f"{_COUNT_FLAG}={n}"
+    flags = os.environ.get("XLA_FLAGS", "").split()
+    if want in flags:
+        return
+    flags = [f for f in flags if not f.startswith(_COUNT_FLAG)]
+    os.environ["XLA_FLAGS"] = " ".join(flags + [want])
+    os.execv(sys.executable,
+             [sys.executable, "-m", module] + sys.argv[1:])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="lm100m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length (requests vary below it)")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max tokens generated (requests vary below it)")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--no-features", action="store_true",
+                    help="skip the feature-store stage")
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.mesh and "XLA_FLAGS" not in os.environ:
+    if args.mesh:
         n = 1
         for kv in args.mesh.split(","):
             n *= int(kv.split("=")[1])
-        os.environ["XLA_FLAGS"] = \
-            f"--xla_force_host_platform_device_count={n}"
-        os.execv(sys.executable,
-                  [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:])
+        ensure_host_devices(n, "repro.launch.serve")
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from ..configs import get_config, get_reduced
+    from ..core.context import make_context
+    from ..data.unomt import gen_unomt_tables
     from ..models import model as M
     from ..models.sharding import make_policy
+    from ..serving import FeatureStore, Request, ServingEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     policy = None
@@ -48,44 +79,74 @@ def main():
         mesh = jax.make_mesh(tuple(shape.values()), tuple(shape.keys()))
         policy = make_policy(mesh, "fsdp_tp")
 
-    B, P_len, G = args.batch, args.prompt_len, args.gen
-    decode_len = P_len + G
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    prefill = jax.jit(M.make_prefill(cfg, policy, decode_len=decode_len))
-    serve = jax.jit(M.make_serve_step(cfg, policy), donate_argnums=(1,))
 
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (B, P_len)), jnp.int32)}
-    if cfg.frontend == "vision":
-        batch["patch_embeds"] = jnp.zeros(
-            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
-    if cfg.is_encdec:
-        batch["frames"] = jnp.zeros(
-            (B, P_len // cfg.enc_len_ratio, cfg.d_model), jnp.bfloat16)
+    stores = {}
+    n_drugs, n_cells = 256, 128
+    if not args.no_features:
+        ctx = make_context()
+        raw = gen_unomt_tables(n_drugs=n_drugs, n_cells=n_cells,
+                               seed=args.seed)
+        drug = dict(raw["descriptors"])
+        drug.update({k: v for k, v in raw["fingerprints"].items()
+                     if k != "drug_id"})
+        # rna carries duplicate records (paper: drop-duplicates) — keep
+        # the first row per key so store keys are unique
+        _, first = np.unique(raw["rna"]["cell_id"], return_index=True)
+        rna = {k: v[first] for k, v in raw["rna"].items()}
+        cap = max(args.slots, 8)
+        stores = {
+            "drug_id": FeatureStore(ctx, "drug_id", drug,
+                                    probe_capacity=cap, chunk_rows=64),
+            "cell_id": FeatureStore(ctx, "cell_id", rna,
+                                    probe_capacity=cap, chunk_rows=64),
+        }
 
+    engine = ServingEngine(cfg, params, policy=policy, slots=args.slots,
+                           prompt_capacity=args.prompt_len,
+                           gen_capacity=args.gen,
+                           queue_capacity=args.queue_capacity,
+                           feature_stores=stores)
+
+    rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    logits, caches = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"[prefill] {B}x{P_len} tokens in {t_prefill:.3f}s "
-          f"({B * P_len / t_prefill:.0f} tok/s)")
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    outs = [tok]
-    t0 = time.perf_counter()
-    for i in range(G - 1):
-        logits, caches = serve(params, caches, tok,
-                               jnp.int32(P_len + i))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        outs.append(tok)
-    jax.block_until_ready(tok)
+    rejected_ids = []
+    for i in range(args.requests):
+        req = Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                rng.integers(1, args.prompt_len + 1)
+                                ).astype(np.int32),
+            gen_len=int(rng.integers(1, args.gen + 1)),
+            drug_id=int(rng.integers(0, n_drugs)),
+            cell_id=int(rng.integers(0, n_cells)))
+        if not engine.submit(req):
+            rejected_ids.append(i)
+        if (i + 1) % max(args.slots * 4, 8) == 0:
+            engine.step()                  # interleave arrivals and decode
+    done = engine.run_until_drained()
     dt = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    print(f"[decode] {B}x{G - 1} tokens in {dt:.3f}s "
-          f"({B * (G - 1) / max(dt, 1e-9):.0f} tok/s)")
-    print(f"[sample] first sequence: {gen[0][:12].tolist()}")
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    m = engine.metrics
+    snap = m.snapshot()
+    print(f"[serve] {len(done)} completed / {len(rejected_ids)} rejected "
+          f"of {args.requests} in {dt:.2f}s "
+          f"({m.count('tokens_generated') / dt:.0f} tok/s)")
+    for k in sorted(snap["counters"]):
+        print(f"  counter {k:>18} = {snap['counters'][k]}")
+    for k, g in snap["gauges"].items():
+        print(f"  gauge   {k:>18} = last {g['last']:.0f} max {g['max']:.0f}")
+    for k, s in snap["latency"].items():
+        if s["count"]:
+            print(f"  series  {k:>18} = p50 {s['p50'] * 1e3:.1f}ms "
+                  f"p99 {s['p99'] * 1e3:.1f}ms n={s['count']}")
+    assert m.count("submitted") == m.count("completed") + \
+        m.count("rejected") + m.count("feature_misses"), \
+        "accounting identity violated"
+    for r in done:
+        assert len(r.out_tokens) == r.gen_len, (r.req_id, r.status)
+        if stores and r.status == "done":
+            assert r.features, f"request {r.req_id} served without features"
     print("serve OK")
 
 

@@ -133,16 +133,21 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     """Single-token decode: q (B,Hq,1,D) vs cache (B,Hkv,S,D).
 
     Positions ``>= cache_len + 1`` (i.e. beyond the just-written token) are
-    masked.  Shard-friendly: reductions over the cache S axis lower to
-    (all-)reduces when S is sharded — the flash-decoding pattern falls out
-    of GSPMD automatically.
+    masked.  ``cache_len`` is a scalar (whole batch at one position) or a
+    ``(B,)`` vector (continuous batching: every slot at its own position —
+    the serving engine's per-slot decode).  Shard-friendly: reductions over
+    the cache S axis lower to (all-)reduces when S is sharded — the
+    flash-decoding pattern falls out of GSPMD automatically.
     """
     B, Hq, _, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
     s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache.astype(jnp.float32))
-    live = jnp.arange(S)[None, None, None, :] <= cache_len
+    cl = jnp.asarray(cache_len)
+    if cl.ndim:                       # per-slot lengths: (B,) -> (B,1,1,1)
+        cl = cl[:, None, None, None]
+    live = jnp.arange(S)[None, None, None, :] <= cl
     s = jnp.where(live, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))

@@ -146,21 +146,32 @@ def attn_apply(p, cfg, x, positions, *, causal=True, kv_x=None,
 
 def attn_decode(p, cfg, x, cache, cache_len, *, cross=False, policy=None):
     """One-token decode.  cache = {"k","v"} (B,Hkv,S,D); for cross
-    attention the cache holds the (static) encoder memory."""
+    attention the cache holds the (static) encoder memory.
+
+    ``cache_len`` is a scalar or a ``(B,)`` vector of per-slot positions
+    (continuous batching: each sequence in the batch decodes at its own
+    length — the write, rope phase, and mask are all per-slot)."""
     q = _split_heads(dense(p["wq"], x), cfg.n_heads, cfg.d_head)
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q, cfg.norm_eps)
     if not cross:
+        cl = jnp.asarray(cache_len)
+        pos = cl if cl.ndim == 0 else cl[:, None]        # rope: (B,1)
         k_new = _split_heads(dense(p["wk"], x), cfg.n_kv_heads, cfg.d_head)
         v_new = _split_heads(dense(p["wv"], x), cfg.n_kv_heads, cfg.d_head)
         if cfg.qk_norm:
             k_new = rms_norm(p["k_norm"], k_new, cfg.norm_eps)
-        q = rope(q, cache_len, cfg.rope_theta)
-        k_new = rope(k_new, cache_len, cfg.rope_theta)
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
         # one-hot scatter write (shard-friendly on a sharded S axis)
         S = cache["k"].shape[2]
-        onehot = (jnp.arange(S) == cache_len).astype(cache["k"].dtype)
-        oh = onehot[None, None, :, None]
+        if cl.ndim == 0:
+            onehot = (jnp.arange(S) == cl).astype(cache["k"].dtype)
+            oh = onehot[None, None, :, None]
+        else:                       # per-slot write position: (B,1,S,1)
+            onehot = (jnp.arange(S)[None, :] == cl[:, None]) \
+                .astype(cache["k"].dtype)
+            oh = onehot[:, None, :, None]
         cache = {
             "k": cache["k"] * (1 - oh) + k_new.astype(cache["k"].dtype) * oh,
             "v": cache["v"] * (1 - oh) + v_new.astype(cache["v"].dtype) * oh,

@@ -268,7 +268,12 @@ def make_prefill(cfg, policy: Optional[Policy], *, decode_len: int,
 def make_serve_step(cfg, policy: Optional[Policy], *,
                     attn_impl: str = "xla"):
     """One decode step: (params, caches, tokens (B,1), cache_len) ->
-    (logits (B,V), new caches)."""
+    (logits (B,V), new caches).
+
+    ``cache_len`` is a scalar (the one-shot serve loop: whole batch at the
+    same position) or a ``(B,)`` vector of per-slot positions (the serving
+    engine's continuous batching: each slot decodes at its own length —
+    see ``repro.serving``)."""
     opts = opts_from_cfg(cfg, attn_impl=attn_impl)
 
     def serve_step(params, caches, tokens, cache_len):
@@ -282,6 +287,46 @@ def make_serve_step(cfg, policy: Optional[Policy], *,
             tied_embed=params["embed"] if cfg.tie_embeddings else None)
         return logits[:, 0], new_caches
     return serve_step
+
+
+def make_slot_prefill(cfg, policy: Optional[Policy], *, decode_len: int,
+                      attn_impl: str = "xla"):
+    """Prefill for one continuous-batching slot refill.
+
+    ``(params, batch, length) -> (logits (B,V), caches)`` where
+    ``batch['tokens']`` is a fixed-shape *right-padded* prompt ``(B,P)``
+    and ``length`` is the true prompt length: logits are taken at
+    position ``length - 1`` (the last real token — it attends only to
+    real positions under the causal mask) instead of the padded end.
+    Padding rows land in cache positions ``>= length`` but stay masked at
+    decode (``decode_attention`` masks ``> cache_len``) and are
+    overwritten token by token as the slot generates.  One fixed padded
+    shape = one jit trace for every prompt length (heterogeneous request
+    sizes all hit the cached executable)."""
+    opts = opts_from_cfg(cfg, decode_len=decode_len, attn_impl=attn_impl)
+
+    def slot_prefill(params, batch, length):
+        x, _aux, caches, n_prefix = backbone(params, cfg, batch, policy,
+                                             opts, want_cache=True)
+        idx = jnp.asarray(n_prefix + length - 1, jnp.int32)
+        xl = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+        logits = Ly.logits_out(
+            params.get("lm_head"), xl,
+            tied_embed=params["embed"] if cfg.tie_embeddings else None)
+        return logits[:, 0], caches
+    return slot_prefill
+
+
+def write_cache_slot(caches, one, slot):
+    """Scatter a single-sequence cache pytree (batch 1, as produced by
+    ``make_slot_prefill``) into a running batch cache at batch index
+    ``slot`` — the continuous-batching refill: freed slots take a new
+    sequence's prefilled KV without touching the other slots.  All cache
+    leaves are stacked ``(n_groups, B, ...)``, so the slot axis is 1."""
+    def upd(b, o):
+        start = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, o.astype(b.dtype), start)
+    return jax.tree_util.tree_map(upd, caches, one)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,10 @@
+"""Continuous-batching serving engine fused with distributed feature
+joins (see ``engine.py`` for the stage-by-stage story and ``README.md``
+for the metrics schema and counted-rejection contract)."""
+from .batcher import SlotBatch
+from .engine import FeatureStore, Request, ServingEngine
+from .metrics import ServingMetrics
+from .queue import AdmissionQueue
+
+__all__ = ["AdmissionQueue", "FeatureStore", "Request", "ServingEngine",
+           "ServingMetrics", "SlotBatch"]
