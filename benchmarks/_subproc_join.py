@@ -21,7 +21,6 @@ def main():
     from jax.sharding import Mesh
     from repro.core import dist_ops as D
     from repro.core.context import make_context
-    from repro.kernels.hash_join import workload_hash_join_sizes
 
     dev = np.array(jax.devices()[:world])
     ctx = make_context(Mesh(dev, ("data",)))
@@ -32,20 +31,19 @@ def main():
             "lv": rng.normal(size=rows).astype(np.float32)}
     right = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
              "rv": rng.normal(size=rows).astype(np.float32)}
-    cap = (rows // world) * 2
-    gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
-    gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
-    # 2x headroom on the per-shard key estimate: bucket hashing is not
-    # perfectly balanced, and at small (--fast) sizes a single hot bucket
-    # can overflow its slab without it
-    sizes = workload_hash_join_sizes(2 * max(rows // 10 // world, 1)) \
-        if impl == "hash" else None
+    gl = D.distribute_table(ctx, left)
+    gr = D.distribute_table(ctx, right)
+    # size every static capacity (shuffle slabs, join output, hash slabs)
+    # exactly from the key distributions instead of blind overcommit
+    plan = D.plan_dist_join_sizes([left["k"]], [right["k"]], world=world,
+                                  local_impl=impl)
     pipe = D.DistributedPipeline(
-        ctx, lambda c, a, b: D.dist_join(c, a, b, left_on=["k"],
-                                         out_capacity=cap * 16,
-                                         overcommit=3.0,
-                                         local_impl=impl,
-                                         local_join_sizes=sizes))
+        ctx, lambda c, a, b: D.dist_join(
+            c, a, b, left_on=["k"],
+            out_capacity=plan["out_capacity"],
+            shuffle_sizes=plan["shuffle_sizes"],
+            local_impl=impl,
+            local_join_sizes=plan["local_join_sizes"]))
     out, dropped = pipe(gl, gr)             # compile + first run
     jax.block_until_ready(out.nvalid)
     ts = []

@@ -57,7 +57,8 @@ def run(fast: bool = False):
         res = run_subprocess_bench("_subproc_join.py", world, world, rows,
                                    "sortmerge")
         rep.add(f"hptmt_p{world}", "seconds", res["seconds"], rows=rows,
-                out_rows=res["out_rows"], dropped=res["dropped"])
+                out_rows=res["out_rows"], dropped=res["dropped"],
+                vs_numpy=base_s / res["seconds"])
         if world == 1:
             t1 = res["seconds"]
         else:
@@ -68,8 +69,8 @@ def run(fast: bool = False):
     # local-backend sweep: same pipeline, both local join backends
     repb = Reporter("join_local_backends")
     brows = BACKEND_ROWS // 4 if fast else BACKEND_ROWS
-    repb.add("numpy_1core", "seconds", numpy_join_baseline(brows),
-             rows=brows)
+    bbase_s = numpy_join_baseline(brows)
+    repb.add("numpy_1core", "seconds", bbase_s, rows=brows)
     for world in (1, 2, 4):
         per_impl = {}
         for impl in ("sortmerge", "hash"):
@@ -77,7 +78,8 @@ def run(fast: bool = False):
                                        brows, impl)
             repb.add(f"{impl}_p{world}", "seconds", res["seconds"],
                      rows=brows, out_rows=res["out_rows"],
-                     dropped=res["dropped"])
+                     dropped=res["dropped"],
+                     vs_numpy=bbase_s / res["seconds"])
             per_impl[impl] = res
         assert per_impl["sortmerge"]["out_rows"] == \
             per_impl["hash"]["out_rows"], "backend row-count mismatch"

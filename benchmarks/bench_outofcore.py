@@ -12,7 +12,9 @@ fact rows (every probe key hits exactly one build row).
 """
 from __future__ import annotations
 
-from .common import Reporter, run_subprocess_bench
+import numpy as np
+
+from .common import Reporter, run_subprocess_bench, timeit
 
 ROWS = 10_000_000      # paper: 200M; 50x the monolithic fig4 leg
 CHUNK = 1_000_000
@@ -20,10 +22,38 @@ FAST_ROWS = 400_000
 FAST_CHUNK = 100_000
 
 
+def numpy_outofcore_baseline(rows: int) -> tuple[float, float]:
+    """Single-core numpy reference for the same fact-vs-dimension
+    workload (whole-array, no chunking — the in-RAM best case the
+    streaming engine is compared against): sort-merge style join via
+    searchsorted on the sorted dimension keys, groupby via bincount."""
+    rng = np.random.default_rng(0)
+    nkeys = max(rows // 10, 1)
+    lk = rng.integers(0, nkeys, rows).astype(np.int32)
+    lv = rng.normal(size=rows).astype(np.float32)
+    rk = np.arange(nkeys, dtype=np.int32)
+    rv = rng.normal(size=nkeys).astype(np.float32)
+
+    def join():
+        order = np.argsort(rk, kind="stable")
+        pos = np.searchsorted(rk[order], lk)
+        return lv + rv[order[pos]]
+
+    def groupby():
+        return (np.bincount(lk, weights=lv, minlength=nkeys),
+                np.bincount(lk, minlength=nkeys))
+
+    return timeit(join, warmup=1, iters=3), \
+        timeit(groupby, warmup=1, iters=3)
+
+
 def run(fast: bool = False):
     rep = Reporter("outofcore_morsel")
     rows = FAST_ROWS if fast else ROWS
     chunk = FAST_CHUNK if fast else CHUNK
+    join_base_s, groupby_base_s = numpy_outofcore_baseline(rows)
+    rep.add("numpy_join_1core", "seconds", join_base_s, rows=rows)
+    rep.add("numpy_groupby_1core", "seconds", groupby_base_s, rows=rows)
     for world in (2, 4):
         res = run_subprocess_bench("_subproc_outofcore.py", world, world,
                                    rows, chunk, timeout=3600)
@@ -33,12 +63,14 @@ def run(fast: bool = False):
         rep.add(f"join_p{world}", "seconds", res["join_seconds"],
                 rows=rows, chunk_rows=chunk, chunks=res["chunks"],
                 out_rows=res["join_out_rows"],
-                dropped=res["join_dropped"])
+                dropped=res["join_dropped"],
+                vs_numpy=join_base_s / res["join_seconds"])
         rep.add(f"join_p{world}", "rows_per_sec",
                 rows / res["join_seconds"], rows=rows)
         rep.add(f"groupby_p{world}", "seconds", res["groupby_seconds"],
                 rows=rows, chunk_rows=chunk, out_rows=res["groups"],
-                dropped=res["groupby_dropped"])
+                dropped=res["groupby_dropped"],
+                vs_numpy=groupby_base_s / res["groupby_seconds"])
         rep.add(f"groupby_p{world}", "rows_per_sec",
                 rows / res["groupby_seconds"], rows=rows)
     # disk-backed probe: same streaming pass with np.memmap columns —
@@ -51,12 +83,14 @@ def run(fast: bool = False):
     assert res["join_out_rows"] == rows, res
     rep.add(f"join_p{world}_memmap", "seconds", res["join_seconds"],
             rows=rows, chunk_rows=chunk, chunks=res["chunks"],
-            out_rows=res["join_out_rows"], dropped=res["join_dropped"])
+            out_rows=res["join_out_rows"], dropped=res["join_dropped"],
+            vs_numpy=join_base_s / res["join_seconds"])
     rep.add(f"join_p{world}_memmap", "rows_per_sec",
             rows / res["join_seconds"], rows=rows)
     rep.add(f"groupby_p{world}_memmap", "seconds",
             res["groupby_seconds"], rows=rows, chunk_rows=chunk,
-            out_rows=res["groups"], dropped=res["groupby_dropped"])
+            out_rows=res["groups"], dropped=res["groupby_dropped"],
+            vs_numpy=groupby_base_s / res["groupby_seconds"])
     rep.add(f"groupby_p{world}_memmap", "rows_per_sec",
             rows / res["groupby_seconds"], rows=rows)
     rep.save()

@@ -61,7 +61,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -75,6 +74,7 @@ from .kernel_backend import radix_impl
 from .kernel_backend import sort_impl as _default_sort_impl
 from .partition import hash_columns, partition_ids
 from .table import Table, narrow_column as _narrow_column
+from ..kernels import bucketing as _bucketing
 from ..kernels.hash_partition import radix_histogram_ranks
 from ..kernels.radix_sort import radix_permutation, stable_partition_perm
 
@@ -165,8 +165,8 @@ def shuffle_by_pid(ctx: HptmtContext, table: Table, pid: jnp.ndarray,
     static ``slots_per_dest``/``out_capacity`` bounds (0 when sized right).
     """
     world = ctx.world_size
-    cap = table.capacity
     valid = table.valid_mask
+    names = table.names
     # trash partition `world` for padding rows
     pid = jnp.where(valid, pid, world)
     hist, ranks = radix_histogram_ranks(pid, world + 1, impl=radix_impl())
@@ -175,28 +175,37 @@ def shuffle_by_pid(ctx: HptmtContext, table: Table, pid: jnp.ndarray,
                      world * slots_per_dest)
     nslots = world * slots_per_dest
 
-    def scatter(col):
-        buf = jnp.zeros((nslots + 1,), col.dtype).at[flat].set(col)
-        return buf[:nslots].reshape(world, slots_per_dest)
-
-    sent_valid = (jnp.zeros((nslots + 1,), jnp.bool_).at[flat].set(ok)
-                  [:nslots].reshape(world, slots_per_dest))
-    a2a = partial(jax.lax.all_to_all, axis_name=ctx.row_axes,
-                  split_axis=0, concat_axis=0, tiled=True)
-    recv_valid = a2a(sent_valid).reshape(-1)
-    cols = {}
-    for name in table.names:
-        recv = a2a(scatter(table.columns[name])).reshape(-1)
-        cols[name] = recv
-    received = Table(columns=cols,
-                     nvalid=jnp.sum(recv_valid, dtype=jnp.int32))
-    # received rows are scattered across slots -> compact to front (the
-    # radix engine's 1-bit pass — bit-identical to the stable boolean
-    # argsort it replaces, no sort primitive), then truncate.
-    perm = stable_partition_perm(recv_valid, impl=radix_impl())
+    # send side: every column (bitcast to an int32 plane) plus the
+    # occupancy plane land in the (ncols+1, nslots) send slabs via ONE
+    # stacked scatter — not one scatter per column.
+    planes = [_bucketing.pack_i32(table.columns[n]) for n in names] \
+        + [ok.astype(jnp.int32)]
+    stacked = jnp.stack(planes)                     # (ncols+1, cap)
+    send = (jnp.zeros((len(planes), nslots + 1), jnp.int32)
+            .at[:, flat].set(stacked)[:, :nslots]
+            .reshape(len(planes), world, slots_per_dest))
+    # ONE all_to_all moves all columns together: block d of axis 1 goes
+    # to shard d, so per (column, destination) the payload is exactly the
+    # old per-column transfer.
+    recv = jax.lax.all_to_all(send, ctx.row_axes, split_axis=1,
+                              concat_axis=1, tiled=True) \
+        .reshape(len(planes), nslots)
+    recv_valid = recv[-1] > 0
     n_recv = jnp.sum(recv_valid, dtype=jnp.int32)
-    compacted = received.gather_rows(perm[:out_capacity],
-                                     jnp.minimum(n_recv, out_capacity))
+    # receive side: write the all_to_all output straight into the
+    # out_capacity slabs with one stacked scatter — each valid row's slot
+    # is its rank among valid rows in slot order (cumsum), which is
+    # bit-identical to the stable-partition + gather compaction it
+    # replaces, without materializing the intermediate table.
+    pos = jnp.cumsum(recv_valid.astype(jnp.int32)) - 1
+    okr = recv_valid & (pos < out_capacity)
+    dest = jnp.where(okr, pos, out_capacity)
+    out = (jnp.zeros((len(names), out_capacity + 1), jnp.int32)
+           .at[:, dest].set(recv[:-1])[:, :out_capacity])
+    cols = {n: _bucketing.unpack_i32(out[i], table.columns[n].dtype)
+            for i, n in enumerate(names)}
+    compacted = Table(columns=cols,
+                      nvalid=jnp.minimum(n_recv, out_capacity))
     sent_dropped = jnp.sum(
         jnp.maximum(hist[:world] - slots_per_dest, 0), dtype=jnp.int32)
     recv_dropped = jnp.maximum(n_recv - out_capacity, 0)
@@ -211,6 +220,104 @@ def default_shuffle_sizes(ctx: HptmtContext, capacity: int,
     slots = max(1, math.ceil(capacity * overcommit / world))
     out_cap = max(capacity, math.ceil(capacity * overcommit))
     return slots, out_cap
+
+
+def _pad8(load: float, headroom: float) -> int:
+    """Observed load -> static capacity: headroom cushion, lane-aligned."""
+    return max(8, -(-int(math.ceil(load * headroom)) // 8) * 8)
+
+
+def plan_dist_join_sizes(left_keys: Sequence[np.ndarray],
+                         right_keys: Sequence[np.ndarray], *, world: int,
+                         how: str = "inner", headroom: float = 1.25,
+                         local_impl: str | None = None,
+                         num_buckets: int | None = None) -> dict:
+    """Host-side whole-join capacity oracle for a shuffle-strategy
+    :func:`dist_join`.
+
+    Sizes every static capacity of the distributed join from the *actual*
+    key distributions, once, before any device work: the shuffle slabs
+    (per-destination slot bound and receive capacity per side), the join
+    output capacity, and — under the hash local backend — the per-bucket
+    build/probe slab depths.  Equal keys co-locate (partition id and
+    bucket id are functions of the key value only), so per-destination and
+    per-bucket loads are exact host-side regardless of how rows are
+    block-distributed among senders: a destination receives at most the
+    total count of its keys, whatever the sender split.  Every bound is
+    the observed per-key/per-destination maximum times ``headroom``,
+    rounded up to a multiple of 8 — the distributed join's overflow
+    counter is zero by construction for these keys, with static shapes
+    far below the blind ``overcommit`` heuristics.
+
+    ``left_keys`` / ``right_keys`` are parallel sequences of *concrete*
+    key columns (the same arrays later fed to :func:`distribute_table`);
+    the per-key hash chain reuses the engine's own ``hash_columns`` /
+    ``bucketing.bucket_ids``, so the plan prices exactly the routing the
+    shuffle and the hash kernels will perform.
+
+    Returns ``{"shuffle_sizes": {"left": (slots_per_dest, out_capacity),
+    "right": ...}, "out_capacity": ..., "local_join_sizes": ...}`` —
+    keyword-compatible with :func:`dist_join` (``local_join_sizes`` is
+    ``None`` unless ``local_impl='hash'``).
+    """
+    lcols = [np.asarray(_narrow_column(f"k{i}", np.asarray(c)))
+             for i, c in enumerate(left_keys)]
+    rcols = [np.asarray(_narrow_column(f"k{i}", np.asarray(c)))
+             for i, c in enumerate(right_keys)]
+    nl, nr = len(lcols[0]), len(rcols[0])
+    # partition ids with each side's own dtype (what shuffle hashes) ...
+    pid = np.concatenate([
+        np.asarray(hash_columns([jnp.asarray(c) for c in lcols])
+                   % jnp.uint32(world)).astype(np.int64),
+        np.asarray(hash_columns([jnp.asarray(c) for c in rcols])
+                   % jnp.uint32(world)).astype(np.int64)])
+    # ... but key identity in the promoted common dtype (what the local
+    # join compares), mirroring the engine's key promotion rule.
+    planes = []
+    for lc, rc in zip(lcols, rcols):
+        dt = np.promote_types(lc.dtype, rc.dtype)
+        dt = np.float32 if np.issubdtype(dt, np.floating) else np.int32
+        planes.append(np.asarray(_bucketing.key_bits(
+            jnp.asarray(np.concatenate([lc.astype(dt), rc.astype(dt)])))))
+    bits = np.stack(planes, axis=1)                       # (nl+nr, K)
+    uniq, first, inv = np.unique(bits, axis=0, return_index=True,
+                                 return_inverse=True)
+    inv = inv.reshape(-1)
+    n_uniq = uniq.shape[0]
+    cl = np.bincount(inv[:nl], minlength=n_uniq).astype(np.float64)
+    cr = np.bincount(inv[nl:], minlength=n_uniq).astype(np.float64)
+    upid = pid[first]
+
+    def _side(counts):
+        recv = np.bincount(upid, weights=counts, minlength=world)
+        cap = _pad8(recv.max() if n_uniq else 0, headroom)
+        return cap, cap        # slots_per_dest bound == receive capacity
+
+    lsizes, rsizes = _side(cl), _side(cr)
+    matches = cl * cr
+    if how == "left":
+        matches = matches + np.where(cr == 0, cl, 0)
+    per_dest = np.bincount(upid, weights=matches, minlength=world)
+    out_cap = _pad8(per_dest.max() if n_uniq else 0, headroom)
+
+    local_sizes = None
+    if local_impl == "hash":
+        B = num_buckets or _bucketing.default_bucket_count(
+            max(lsizes[1], rsizes[1]))
+        ubid = np.asarray(_bucketing.bucket_ids(
+            tuple(jnp.asarray(uniq[:, k]) for k in range(uniq.shape[1])),
+            B)).astype(np.int64)
+        db = upid * B + ubid
+        local_sizes = dict(
+            num_buckets=B,
+            bucket_capacity=_pad8(
+                np.bincount(db, weights=cr, minlength=world * B).max()
+                if n_uniq else 0, headroom),
+            probe_capacity=_pad8(
+                np.bincount(db, weights=cl, minlength=world * B).max()
+                if n_uniq else 0, headroom))
+    return {"shuffle_sizes": {"left": lsizes, "right": rsizes},
+            "out_capacity": out_cap, "local_join_sizes": local_sizes}
 
 
 def shuffle(ctx: HptmtContext, table: Table, key_cols: Sequence[str],
@@ -234,7 +341,8 @@ def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
               how: str = "inner", out_capacity: int | None = None,
               overcommit: float = 2.0, strategy: str = "shuffle",
               local_impl: str | None = None,
-              local_join_sizes: Mapping[str, int] | None = None):
+              local_join_sizes: Mapping[str, int] | None = None,
+              shuffle_sizes: Mapping[str, tuple[int, int]] | None = None):
     """Distributed join (paper Fig. 4 operator).
 
     ``strategy='shuffle'``: hash-shuffle both sides on the key, local join
@@ -247,6 +355,11 @@ def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
     hash-backend static sizing (``num_buckets`` / ``bucket_capacity`` /
     ``probe_capacity``) — both backends return drop-in identical results,
     so the whole distributed join runs hash-local under one shard_map.
+    ``shuffle_sizes`` overrides the blind ``overcommit`` shuffle heuristic
+    with explicit per-side ``{"left"/"right": (slots_per_dest,
+    out_capacity)}`` bounds — :func:`plan_dist_join_sizes` computes these
+    (and ``out_capacity`` / ``local_join_sizes``) exactly from concrete
+    keys host-side.
     """
     right_on = list(right_on) if right_on is not None else list(left_on)
     jkw = dict(local_join_sizes or {})
@@ -262,8 +375,12 @@ def dist_join(ctx: HptmtContext, left: Table, right: Table, *,
     rp_tbl = right.rename(dict(zip(right_on, left_on))) \
         if right_on != list(left_on) else right
     rp = partition_ids(rp_tbl, list(left_on), ctx.world_size)
-    ls, loc = default_shuffle_sizes(ctx, left.capacity, overcommit)
-    rs, roc = default_shuffle_sizes(ctx, right.capacity, overcommit)
+    if shuffle_sizes is not None:
+        ls, loc = shuffle_sizes["left"]
+        rs, roc = shuffle_sizes["right"]
+    else:
+        ls, loc = default_shuffle_sizes(ctx, left.capacity, overcommit)
+        rs, roc = default_shuffle_sizes(ctx, right.capacity, overcommit)
     lsh, ldrop = shuffle_by_pid(ctx, left, lp, ls, loc)
     rsh, rdrop = shuffle_by_pid(ctx, right, rp, rs, roc)
     # the local join's overflow (output capacity, hash bucket/probe slabs)

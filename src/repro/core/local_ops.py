@@ -464,25 +464,28 @@ def _sort_groupby(table: Table, by: list,
     return Table(columns=cols, nvalid=ngroups)
 
 
-def _planned_sizes(cols: tuple, nvalid, capacity: int, num_buckets,
-                   explicit_capacity):
+def _planned_sizes(bplan: bucketing.BucketPlan, nvalid, capacity: int,
+                   num_buckets, explicit_capacity):
     """Distribution-proof static sizing via the two-pass bucket planner.
 
     Above ``bucketing.EXACT_SLAB_CAP`` the uniform auto-sizing heuristic
-    can overflow on skewed keys; when the key columns are *concrete* (an
-    eager call — not traced under jit/shard_map) the planner histograms
-    the actual bucket loads host-side and sizes the slab to cover the
-    real maximum.  Returns ``(num_buckets, bucket_capacity)`` or ``None``
-    when planning is not applicable (explicit capacity, exact-slab range,
-    or traced inputs — the heuristic applies there).
+    can overflow on skewed keys; when the key bit-planes are *concrete*
+    (an eager call — not traced under jit/shard_map) the planner
+    histograms the actual bucket loads host-side and sizes the slab to
+    cover the real maximum.  The hash it runs is memoized on the
+    :class:`~..kernels.bucketing.BucketPlan`, so the kernel plan reuses
+    the same bucket ids instead of re-hashing.  Returns ``(num_buckets,
+    bucket_capacity)`` or ``None`` when planning is not applicable
+    (explicit capacity, exact-slab range, or traced inputs — the
+    heuristic applies there).
     """
     if explicit_capacity is not None or capacity <= bucketing.EXACT_SLAB_CAP:
         return None
-    if isinstance(nvalid, jax.core.Tracer) or any(
-            isinstance(c, jax.core.Tracer) for c in cols):
+    if isinstance(nvalid, jax.core.Tracer) or not bplan.concrete:
         return None
     n = int(nvalid)
-    B, C = bucketing.plan_bucket_sizes([c[:n] for c in cols], num_buckets)
+    B, C = bucketing.plan_bucket_sizes(num_buckets=num_buckets,
+                                       plan=bplan, nvalid=n)
     # slab sizes are static args of the jitted plans: quantize the planned
     # capacity to the next power of two so shifting key distributions
     # retrace at most log2(capacity) times, not once per observed load
@@ -492,18 +495,21 @@ def _planned_sizes(cols: tuple, nvalid, capacity: int, num_buckets,
 def _run_hash_groupby_plan(table: Table, by: list, value_cols: tuple,
                            num_buckets, bucket_capacity, kernel_impl):
     keys = tuple(table.columns[k] for k in by)
-    planned = _planned_sizes(keys, table.nvalid, table.capacity,
+    bp = bucketing.BucketPlan(keys, table.valid_mask)
+    planned = _planned_sizes(bp, table.nvalid, table.capacity,
                              num_buckets, bucket_capacity)
     if planned is not None:
         B, C = planned
+        bid = bp.bucket_ids_for(B)   # the sizing pass's hash, reused
     else:
         B, C = default_hash_groupby_sizes(table.capacity, num_buckets)
         C = bucket_capacity or C
+        bid = None
     return hash_groupby_plan(
-        keys, table.valid_mask,
+        bp.bits, table.valid_mask,
         tuple(table.columns[c] for c in value_cols),
         num_buckets=B, bucket_capacity=C,
-        impl=kernel_impl or _default_kernel_impl())
+        impl=kernel_impl or _default_kernel_impl(), bid=bid)
 
 
 def _canonical_group_layout(table: Table, by: list, plan,
@@ -813,24 +819,32 @@ def _hash_join(left: Table, right: Table, left_on, right_on, how,
                                        num_buckets)
     # compare in the promoted common dtype (same rule as the sort-merge
     # backend): the hash only picks the bucket, equality is on the
-    # promoted key bits
+    # promoted key bits.  Bit-planes are extracted ONCE per side here and
+    # shared by the sizing pass and the kernel plan (BucketPlan).
     qkeys, rkeys = _promoted_semi_keys(left, right, list(left_on),
                                        list(right_on))
+    lbp = bucketing.BucketPlan(qkeys, left.valid_mask)
+    rbp = bucketing.BucketPlan(rkeys, right.valid_mask)
     # two-pass planner (concrete keys, above the exact-slab range): size
     # the build chains / probe slabs to the real per-bucket maxima
     big = max(left.capacity, right.capacity)
-    built = _planned_sizes(rkeys, right.nvalid, big, B, bucket_capacity)
+    built = _planned_sizes(rbp, right.nvalid, big, B, bucket_capacity)
     if built is not None:
         C = built[1]
-    probed = _planned_sizes(qkeys, left.nvalid, big, B, probe_capacity)
+    probed = _planned_sizes(lbp, left.nvalid, big, B, probe_capacity)
     if probed is not None:
         Lc = probed[1]
     C = bucket_capacity or C
     Lc = probe_capacity or Lc
-    plan = hash_join_plan(qkeys, left.valid_mask, rkeys, right.valid_mask,
+    plan = hash_join_plan(lbp.bits, left.valid_mask, rbp.bits,
+                          right.valid_mask,
                           num_buckets=B, bucket_capacity=C,
                           probe_capacity=Lc,
-                          impl=kernel_impl or _default_kernel_impl())
+                          impl=kernel_impl or _default_kernel_impl(),
+                          left_bid=(lbp.bucket_ids_for(B)
+                                    if probed is not None else None),
+                          right_bid=(rbp.bucket_ids_for(B)
+                                     if built is not None else None))
 
     # a probe-dropped left row's match status is unknown: it is excluded
     # from emission entirely (counted in probe_dropped), never emitted as
@@ -839,25 +853,35 @@ def _hash_join(left: Table, right: Table, left_on, right_on, how,
     mc = plan.match_counts
     cum, offs, total = _emit_layout(mc, lvalid, how)
 
-    # scatter matched pairs: slot = offs[left row] + within-row match rank
+    # ONE scatter over the pair space: each matched (bucket, probe slot,
+    # chain slot) pair writes its own flat pair index to output slot
+    # offs[left row] + within-row match rank; the row ids are then
+    # *decoded* from the pair index with out_cap-sized gathers (pair //
+    # C walks the probe slots, so probe_row/build_row recover the
+    # original rows) instead of scattering three pair-space planes.
     slot = offs[plan.probe_row][:, :, None] + plan.rank      # (B, Lc, C)
     keep = (plan.rank >= 0) & (slot < out_cap)
     flat = jnp.where(keep, slot, out_cap).reshape(-1)
-    lrow_pair = jnp.broadcast_to(plan.probe_row[:, :, None], keep.shape)
-    rrow_pair = jnp.broadcast_to(plan.build_row[:, None, :], keep.shape)
-    buf_l = jnp.zeros((out_cap + 1,), jnp.int32) \
-        .at[flat].set(lrow_pair.reshape(-1))
-    buf_r = jnp.zeros((out_cap + 1,), jnp.int32) \
-        .at[flat].set(rrow_pair.reshape(-1))
-    buf_m = jnp.zeros((out_cap + 1,), bool).at[flat].set(keep.reshape(-1))
+    npairs = B * Lc * C
+    pair_ids = jnp.arange(npairs, dtype=jnp.int32)
+    buf = (jnp.full((out_cap + 1,), -1, jnp.int32)
+           .at[flat].set(pair_ids)[:out_cap])
+    matched = buf >= 0
+    pp = jnp.maximum(buf, 0)
+    # pair = (b*Lc + l)*C + c  ->  probe slot index b*Lc+l = pair // C,
+    # build slot index b*C + c = (pair // (Lc*C))*C + pair % C
+    out_lrow = jnp.where(matched,
+                         plan.probe_row.reshape(-1)[pp // C], 0)
+    out_rrow = jnp.where(
+        matched,
+        plan.build_row.reshape(-1)[(pp // (Lc * C)) * C + pp % C], 0)
     if how == "left":
         un = lvalid & (mc == 0)
         flat_u = jnp.where(un & (offs < out_cap), offs, out_cap)
-        buf_l = buf_l.at[flat_u].set(
-            jnp.arange(left.capacity, dtype=jnp.int32))
-    out_lrow = buf_l[:out_cap]
-    out_rrow = buf_r[:out_cap]
-    matched = buf_m[:out_cap]
+        ubuf = (jnp.zeros((out_cap + 1,), jnp.int32)
+                .at[flat_u].set(jnp.arange(left.capacity, dtype=jnp.int32))
+                [:out_cap])
+        out_lrow = jnp.where(matched, out_lrow, ubuf)
 
     cols: dict[str, jax.Array] = {}
     for n in left.names:
@@ -947,21 +971,30 @@ def _hash_semi(qkeys: tuple, left: Table, vkeys: tuple, right: Table,
     sort primitive.  Probe-dropped rows report False and are counted."""
     B, C, Lc = default_hash_semi_sizes(left.capacity, right.capacity,
                                        num_buckets)
+    # bit-planes extracted ONCE per side, shared by the sizing pass and
+    # the kernel plan (BucketPlan caches the hash between them)
+    lbp = bucketing.BucketPlan(qkeys, left.valid_mask)
+    rbp = bucketing.BucketPlan(vkeys, right.valid_mask)
     # two-pass planner (concrete keys, above the exact-slab range): size
     # the build/probe slabs to the real per-bucket maxima
     big = max(left.capacity, right.capacity)
-    built = _planned_sizes(vkeys, right.nvalid, big, B, bucket_capacity)
+    built = _planned_sizes(rbp, right.nvalid, big, B, bucket_capacity)
     if built is not None:
         C = built[1]
-    probed = _planned_sizes(qkeys, left.nvalid, big, B, probe_capacity)
+    probed = _planned_sizes(lbp, left.nvalid, big, B, probe_capacity)
     if probed is not None:
         Lc = probed[1]
     C = bucket_capacity or C
     Lc = probe_capacity or Lc
-    plan = hash_semi_plan(qkeys, left.valid_mask, vkeys, right.valid_mask,
+    plan = hash_semi_plan(lbp.bits, left.valid_mask, rbp.bits,
+                          right.valid_mask,
                           num_buckets=B, bucket_capacity=C,
                           probe_capacity=Lc,
-                          impl=kernel_impl or _default_kernel_impl())
+                          impl=kernel_impl or _default_kernel_impl(),
+                          left_bid=(lbp.bucket_ids_for(B)
+                                    if probed is not None else None),
+                          right_bid=(rbp.bucket_ids_for(B)
+                                     if built is not None else None))
     mask = plan.member & left.valid_mask
     return mask, plan.build_dropped + plan.probe_dropped
 

@@ -1,12 +1,20 @@
 """Shared bucketed-slab machinery for the hash table kernels.
 
-``hash_join`` and ``hash_groupby`` both start the same way: rows are
-scattered into per-bucket *slabs* (static ``num_buckets x slab_cap``
-layouts) keyed by a murmur-mixed hash of the key bit-planes, with stable
-within-bucket order equal to original row order.  That grouping — key
-bit-plane extraction, bucket-id hashing, stable within-bucket ranks, and
-the slot scatter with overflow counting — lives here so every bucketed
-kernel package shares one implementation.
+``hash_join``, ``hash_groupby`` and ``hash_semi`` all start the same way:
+rows are scattered into per-bucket *slabs* (static ``num_buckets x
+slab_cap`` layouts) keyed by a murmur-mixed hash of the key bit-planes,
+with stable within-bucket order equal to original row order.  That
+grouping — key bit-plane extraction, bucket-id hashing, stable
+within-bucket ranks, and the slot scatter with overflow counting — lives
+here so every bucketed kernel package shares one implementation.
+
+The grouping is **single-pass**: the fused ``kernels/fused_bucketing``
+kernel computes bucket ids, histogram and ranks in one sweep (hash and
+one-hot fused per tile, nothing staged through HBM between them), and all
+columns — key bit-planes, occupancy, row ids, payloads — are written to
+their slabs by **one** stacked scatter (every column bitcast to an int32
+plane first), not one scatter per column.  The conformance suites pin one
+scatter per slab family in the jaxpr.
 
 Semantics contract (relied on by the kernels' bit-identicality promise):
 
@@ -17,6 +25,11 @@ Semantics contract (relied on by the kernels' bit-identicality promise):
 * a bucket holds at most ``slab_cap`` rows — overflowing rows are dropped
   and *counted*, never silently lost (callers size capacities so the
   counter stays zero).
+
+:class:`BucketPlan` caches the per-side hashing state — bit-planes
+extracted once, bucket ids memoized per bucket count — so the host-side
+sizing pass (:func:`plan_bucket_sizes`) and the jitted kernel plans never
+re-hash the same columns.
 """
 import math
 
@@ -24,10 +37,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .fused_bucketing import fused_bucket_ranks
+from .fused_bucketing.ref import _mix32, bucket_ids  # noqa: F401  (canonical)
 from .hash_partition import radix_histogram_ranks
 from .radix_sort import grouped_ranks
 
-# the single-pass radix ref/kernel materializes an (n, P) one-hot; past
+# the single-pass fused ref/kernel materializes an (n, P+1) one-hot; past
 # ~512 buckets switch to the multi-pass rank (kernels/radix_sort), whose
 # per-pass one-hot stays at 2^radix_bits — every bucket count is
 # sort-free.  The cap still bounds the cheaper single-pass path and the
@@ -50,23 +65,31 @@ def key_bits(col: jnp.ndarray) -> jnp.ndarray:
     return col.astype(jnp.int32)
 
 
-def _mix32(x: jnp.ndarray) -> jnp.ndarray:
-    """murmur3 fmix32 over uint32 (same family as core.partition)."""
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x85EBCA6B)
-    x = x ^ (x >> 13)
-    x = x * jnp.uint32(0xC2B2AE35)
-    x = x ^ (x >> 16)
-    return x
+def pack_i32(col: jnp.ndarray) -> jnp.ndarray:
+    """Engine column -> int32 plane, value-preserving (floats bitcast, so
+    the round-trip through :func:`unpack_i32` is exact — including NaNs
+    and ``-0.0``).  The stacked single-scatter paths (slab grouping, the
+    shuffle send/receive) move every column as one of these planes."""
+    if col.dtype == jnp.int32:
+        return col
+    if col.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(col, jnp.int32)
+    if col.dtype == jnp.bool_:
+        return col.astype(jnp.int32)
+    raise TypeError(f"unsupported engine column dtype {col.dtype} "
+                    "(engine contract: int32 / float32 / bool)")
 
 
-def bucket_ids(bits: tuple, num_buckets: int) -> jnp.ndarray:
-    """Combined bucket id over key bit-planes (equal keys -> equal bucket)."""
-    h = jnp.full(bits[0].shape, jnp.uint32(0x9E3779B9))
-    for b in bits:
-        u = jax.lax.bitcast_convert_type(b, jnp.uint32)
-        h = _mix32(h ^ (u + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2)))
-    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+def unpack_i32(plane: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Inverse of :func:`pack_i32` for a plane of the given column dtype."""
+    if dtype == jnp.int32:
+        return plane
+    if dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(plane, jnp.float32)
+    if dtype == jnp.bool_:
+        return plane.astype(jnp.bool_)
+    raise TypeError(f"unsupported engine column dtype {dtype} "
+                    "(engine contract: int32 / float32 / bool)")
 
 
 def bucket_ranks(bid: jnp.ndarray, num_buckets: int, impl: str):
@@ -83,7 +106,8 @@ def bucket_ranks(bid: jnp.ndarray, num_buckets: int, impl: str):
 
 
 def group_to_slabs(bits: tuple, valid: jnp.ndarray, num_buckets: int,
-                   slab_cap: int, impl: str, payload: tuple = ()):
+                   slab_cap: int, impl: str, payload: tuple = (),
+                   bid: jnp.ndarray | None = None):
     """Scatter rows into (num_buckets * slab_cap) bucket-grouped slots.
 
     Returns ``(slab_bits (K, B*cap), occ (B*cap,), row (B*cap,),
@@ -91,24 +115,78 @@ def group_to_slabs(bits: tuple, valid: jnp.ndarray, num_buckets: int,
     ``payload`` column scattered with the same slot mapping (the
     hash-groupby value columns).  Slot order within a bucket is original
     row order (stable ranks).
+
+    With ``bid=None`` the bucket ids come out of the fused single-pass
+    kernel (hash + histogram + ranks in one sweep); a caller holding
+    *precomputed* ids (``BucketPlan.bucket_ids_for`` — the eager sizing
+    path already hashed the keys host-side) passes them in and only the
+    histogram/rank pass runs.  Either way all columns land in their slabs
+    via one stacked scatter.
     """
     cap = valid.shape[0]
-    bid = jnp.where(valid, bucket_ids(bits, num_buckets), num_buckets)
-    hist, ranks = bucket_ranks(bid, num_buckets + 1, impl)
+    if bid is not None:
+        bid = jnp.where(valid, bid, num_buckets)
+        hist, ranks = bucket_ranks(bid, num_buckets + 1, impl)
+    elif num_buckets <= MAX_RADIX_BUCKETS:
+        bid, hist, ranks = fused_bucket_ranks(bits, valid, num_buckets,
+                                              impl=impl)
+    else:
+        bid = jnp.where(valid, bucket_ids(bits, num_buckets), num_buckets)
+        hist, ranks = grouped_ranks(bid, num_buckets + 1, impl=impl)
     ok = valid & (ranks < slab_cap) & (bid < num_buckets)
     nslots = num_buckets * slab_cap
     slot = jnp.where(ok, bid * slab_cap + ranks, nslots)
 
-    def scat(col):
-        return jnp.zeros((nslots + 1,), col.dtype).at[slot].set(col)[:nslots]
-
-    slab_bits = jnp.stack([scat(b) for b in bits])
-    occ = scat(ok.astype(jnp.int32))
-    row = scat(jnp.arange(cap, dtype=jnp.int32))
-    payload_slabs = tuple(scat(p) for p in payload)
+    # one scatter for every column: key planes, occupancy, row ids and
+    # payloads stack into (ncols, n) int32 and land in (ncols, nslots)
+    # together (slot nslots is the shared trash column).
+    num_keys = len(bits)
+    planes = (list(bits)
+              + [ok.astype(jnp.int32), jnp.arange(cap, dtype=jnp.int32)]
+              + [pack_i32(p) for p in payload])
+    stacked = jnp.stack(planes)
+    buf = (jnp.zeros((len(planes), nslots + 1), jnp.int32)
+           .at[:, slot].set(stacked)[:, :nslots])
+    slab_bits = buf[:num_keys]
+    occ = buf[num_keys]
+    row = buf[num_keys + 1]
+    payload_slabs = tuple(unpack_i32(buf[num_keys + 2 + i], p.dtype)
+                          for i, p in enumerate(payload))
     dropped = jnp.sum(jnp.maximum(hist[:num_buckets] - slab_cap, 0),
                       dtype=jnp.int32)
     return slab_bits, occ, row, payload_slabs, dropped
+
+
+class BucketPlan:
+    """Cached per-side hashing state threaded through sizing + kernel plans.
+
+    Built once per table side from the (promoted) key columns: the int32
+    bit-planes are extracted exactly once, and bucket ids are memoized per
+    bucket count — so the eager two-pass sizing planner and the jitted
+    kernel plan share one hash of the keys instead of re-hashing per
+    phase.  Traced callers (jit / shard_map) skip :meth:`bucket_ids_for`
+    and let the fused kernel hash in-pass.
+    """
+
+    __slots__ = ("bits", "valid", "_bid")
+
+    def __init__(self, key_cols=None, valid=None, *, bits=None):
+        self.bits = tuple(bits) if bits is not None \
+            else tuple(key_bits(c) for c in key_cols)
+        self.valid = valid
+        self._bid = {}
+
+    @property
+    def concrete(self) -> bool:
+        """True when the bit-planes are concrete (eager caller) — the
+        host-side sizing planner only applies then."""
+        return not any(isinstance(b, jax.core.Tracer) for b in self.bits)
+
+    def bucket_ids_for(self, num_buckets: int) -> jnp.ndarray:
+        """Full-capacity bucket ids for ``num_buckets``, memoized."""
+        if num_buckets not in self._bid:
+            self._bid[num_buckets] = bucket_ids(self.bits, num_buckets)
+        return self._bid[num_buckets]
 
 
 def default_bucket_count(capacity: int) -> int:
@@ -119,8 +197,10 @@ def default_bucket_count(capacity: int) -> int:
                     max(3, (target - 1).bit_length()))
 
 
-def plan_bucket_sizes(key_cols, num_buckets: int | None = None, *,
-                      headroom: float = 1.25, min_capacity: int = 8):
+def plan_bucket_sizes(key_cols=None, num_buckets: int | None = None, *,
+                      headroom: float = 1.25, min_capacity: int = 8,
+                      plan: BucketPlan | None = None,
+                      nvalid: int | None = None):
     """Two-pass (histogram, then size) bucket planner -> ``(num_buckets,
     slab_capacity)`` static sizes that are *distribution-proof* for the
     given keys.
@@ -138,15 +218,29 @@ def plan_bucket_sizes(key_cols, num_buckets: int | None = None, *,
     of the same stream) still fits; ``headroom=1.0`` sizes exactly to the
     observed keys.  Callers under ``jit``/``shard_map`` can't plan (the
     keys are traced); they keep the heuristic or pass explicit sizes.
+
+    Pass a :class:`BucketPlan` (with ``nvalid``) instead of raw columns to
+    reuse its already-extracted bit-planes and memoize the bucket ids for
+    the kernel plan — valid rows are the table prefix, so slicing the
+    full-capacity hash to ``[:nvalid]`` equals hashing the sliced keys.
     """
-    cols = [np.asarray(c) for c in key_cols]
-    n = int(cols[0].shape[0]) if cols else 0
-    if num_buckets is None:
-        num_buckets = default_bucket_count(n)
-    if n == 0:
-        return num_buckets, min_capacity
-    bits = tuple(key_bits(jnp.asarray(c)) for c in cols)
-    bid = np.asarray(bucket_ids(bits, num_buckets))
+    if plan is not None:
+        n = int(nvalid if nvalid is not None
+                else (plan.bits[0].shape[0] if plan.bits else 0))
+        if num_buckets is None:
+            num_buckets = default_bucket_count(n)
+        if n == 0:
+            return num_buckets, min_capacity
+        bid = np.asarray(plan.bucket_ids_for(num_buckets))[:n]
+    else:
+        cols = [np.asarray(c) for c in key_cols]
+        n = int(cols[0].shape[0]) if cols else 0
+        if num_buckets is None:
+            num_buckets = default_bucket_count(n)
+        if n == 0:
+            return num_buckets, min_capacity
+        bits = tuple(key_bits(jnp.asarray(c)) for c in cols)
+        bid = np.asarray(bucket_ids(bits, num_buckets))
     load = int(np.bincount(bid, minlength=num_buckets).max())
     cap = int(math.ceil(load * headroom))
     return num_buckets, max(min_capacity, -(-cap // 8) * 8)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused bucketing kernel.
+
+One logical pass over the rows: murmur-mix the key bit-planes into a
+bucket id, histogram the ids, and rank each row stably within its bucket
+— the grouping pass shared by every bucketed kernel family
+(``hash_join`` / ``hash_groupby`` / ``hash_semi`` and, through
+``bucketing.group_to_slabs``, the set operators).  The hash chain here is
+the *canonical* definition (``bucketing.bucket_ids`` re-exports it): the
+kernel in ``kernel.py`` fuses exactly these ops per tile, so equal keys
+land in equal buckets on every backend, bit for bit.
+
+Invalid rows take the trash bucket ``num_buckets`` — they are counted in
+``hist[num_buckets]`` and never collide with a real bucket's slots.
+"""
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = 0x9E3779B9
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 over uint32 (same family as core.partition)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bucket_ids(bits: tuple, num_buckets: int) -> jnp.ndarray:
+    """Combined bucket id over key bit-planes (equal keys -> equal bucket)."""
+    h = jnp.full(bits[0].shape, jnp.uint32(_GOLDEN))
+    for b in bits:
+        u = jax.lax.bitcast_convert_type(b, jnp.uint32)
+        h = _mix32(h ^ (u + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2)))
+    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+
+
+def fused_bucket_ranks_ref(bits: tuple, valid: jnp.ndarray,
+                           num_buckets: int):
+    """(bid (n,), hist (P+1,), ranks (n,)) for P = num_buckets.
+
+    ``bid`` is ``num_buckets`` (trash) for invalid rows; ``hist`` covers
+    the P real buckets plus the trash bucket; ``ranks`` are stable (row
+    order) within each bucket including trash.
+    """
+    bid = jnp.where(valid, bucket_ids(bits, num_buckets), num_buckets)
+    cols = jnp.arange(num_buckets + 1, dtype=bid.dtype)
+    onehot = (bid[:, None] == cols[None, :]).astype(jnp.int32)
+    hist = jnp.sum(onehot, axis=0)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    ranks = jnp.sum(excl * onehot, axis=1)
+    return bid, hist, ranks

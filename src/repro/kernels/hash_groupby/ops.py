@@ -17,10 +17,13 @@ holds at most ``bucket_capacity`` rows.  Overflowing rows are dropped and
 *counted* (``dropped``) — callers size the capacity so the counter is
 zero, and the conformance suite checks it trips exactly at capacity.
 
-Keys are compared as int32 bit-planes (floats are bitcast after
-normalizing ``-0.0`` to ``+0.0``), so multi-column keys are exact — the
-hash only picks the bucket; group identity is decided on the full key
-bits.  NaN float keys group equal-by-bits (grouping on NaN keys is out of
+The plan takes **key bit-planes**, not raw key columns: the engine
+extracts them once (``bucketing.BucketPlan`` / ``bucketing.key_bits`` —
+floats bitcast to int32 after normalizing ``-0.0`` to ``+0.0``) and
+shares them with the host-side sizing pass, so sizing and aggregation
+never re-hash the same columns.  Multi-column keys are exact — the hash
+only picks the bucket; group identity is decided on the full key bits.
+NaN float keys group equal-by-bits (grouping on NaN keys is out of
 contract, as it is for the sort backend's sort order).
 """
 import functools
@@ -29,7 +32,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..bucketing import (EXACT_SLAB_CAP, default_bucket_count,
+from ..bucketing import (EXACT_SLAB_CAP, default_bucket_count,  # noqa: F401
                          group_to_slabs, key_bits)
 from .kernel import bucket_accumulate_buckets
 from .ref import bucket_accumulate_ref
@@ -55,21 +58,25 @@ class HashGroupbyPlan(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("num_buckets",
                                              "bucket_capacity", "impl"))
-def hash_groupby_plan(keys: tuple, valid: jnp.ndarray, values: tuple = (),
-                      *, num_buckets: int, bucket_capacity: int,
-                      impl: str = "ref") -> HashGroupbyPlan:
-    """Bucketed hash-accumulate over parallel key / value columns.
+def hash_groupby_plan(key_bits_planes: tuple, valid: jnp.ndarray,
+                      values: tuple = (), *, num_buckets: int,
+                      bucket_capacity: int, impl: str = "ref",
+                      bid: jnp.ndarray | None = None) -> HashGroupbyPlan:
+    """Bucketed hash-accumulate over parallel key bit-planes / value
+    columns.
 
     impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
     ``values`` may be empty (key-only grouping, e.g. drop_duplicates); a
-    dummy zero column keeps the kernel signature static.
+    dummy zero column keeps the kernel signature static.  ``bid`` carries
+    precomputed bucket ids (the eager sizing path's hash, via
+    ``BucketPlan``) so the plan doesn't re-hash.
     """
     B, C = num_buckets, bucket_capacity
-    bits = tuple(key_bits(c) for c in keys)
+    bits = tuple(key_bits_planes)
     vals = tuple(v.astype(jnp.float32) for v in values) \
         or (jnp.zeros_like(valid, jnp.float32),)
     slab_bits, occ, row, val_slabs, dropped = group_to_slabs(
-        bits, valid, B, C, impl, payload=vals)
+        bits, valid, B, C, impl, payload=vals, bid=bid)
 
     num_keys = len(bits)
     kb = slab_bits.reshape(num_keys, B, C).transpose(1, 0, 2)

@@ -14,11 +14,14 @@ rows.  Overflowing rows are dropped and *counted* (``build_dropped`` /
 ``probe_dropped``) — callers size the capacities so both are zero, and the
 conformance suite checks the counters trip exactly at capacity.
 
-Keys are compared as int32 bit-planes (floats are bitcast after
-normalizing ``-0.0`` to ``+0.0``), so multi-column keys are exact — the
-hash only picks the bucket; equality is decided on the full key bits.
-NaN float keys compare equal-by-bits (joins on NaN keys are out of
-contract, as they are for the sort-merge path's sort order).
+The plan takes **key bit-planes**, not raw key columns: the engine
+extracts them once per side (``bucketing.BucketPlan`` /
+``bucketing.key_bits`` — floats bitcast to int32 after normalizing
+``-0.0`` to ``+0.0``) and shares them with the host-side sizing pass, so
+build and probe never re-hash the same columns.  Multi-column keys are
+exact — the hash only picks the bucket; equality is decided on the full
+key bits.  NaN float keys compare equal-by-bits (joins on NaN keys are
+out of contract, as they are for the sort-merge path's sort order).
 """
 import functools
 from typing import NamedTuple
@@ -33,10 +36,10 @@ from .ref import bucket_probe_ref
 
 
 def _group(bits: tuple, valid: jnp.ndarray, num_buckets: int,
-           slab_cap: int, impl: str):
+           slab_cap: int, impl: str, bid=None):
     """Bucket-grouped slabs (see kernels.bucketing.group_to_slabs)."""
     slab_bits, occ, row, _, dropped = group_to_slabs(
-        bits, valid, num_buckets, slab_cap, impl)
+        bits, valid, num_buckets, slab_cap, impl, bid=bid)
     return slab_bits, occ, row, dropped
 
 
@@ -60,21 +63,26 @@ class HashJoinPlan(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("num_buckets",
                                              "bucket_capacity",
                                              "probe_capacity", "impl"))
-def hash_join_plan(left_keys: tuple, left_valid: jnp.ndarray,
-                   right_keys: tuple, right_valid: jnp.ndarray, *,
+def hash_join_plan(left_bits: tuple, left_valid: jnp.ndarray,
+                   right_bits: tuple, right_valid: jnp.ndarray, *,
                    num_buckets: int, bucket_capacity: int,
-                   probe_capacity: int, impl: str = "ref") -> HashJoinPlan:
-    """Bucketed build (right) + probe (left) over parallel key columns.
+                   probe_capacity: int, impl: str = "ref",
+                   left_bid: jnp.ndarray | None = None,
+                   right_bid: jnp.ndarray | None = None) -> HashJoinPlan:
+    """Bucketed build (right) + probe (left) over parallel key bit-planes.
 
     impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    ``left_bid`` / ``right_bid`` carry precomputed bucket ids (the eager
+    sizing path's hash, via ``BucketPlan``) so the plan doesn't re-hash.
     """
     B, C, Lc = num_buckets, bucket_capacity, probe_capacity
-    lbits = tuple(key_bits(c) for c in left_keys)
-    rbits = tuple(key_bits(c) for c in right_keys)
+    lbits, rbits = tuple(left_bits), tuple(right_bits)
     lcap = left_valid.shape[0]
 
-    bslab, bocc, brow, build_dropped = _group(rbits, right_valid, B, C, impl)
-    pslab, pocc, prow, probe_dropped = _group(lbits, left_valid, B, Lc, impl)
+    bslab, bocc, brow, build_dropped = _group(rbits, right_valid, B, C,
+                                              impl, bid=right_bid)
+    pslab, pocc, prow, probe_dropped = _group(lbits, left_valid, B, Lc,
+                                              impl, bid=left_bid)
 
     num_keys = len(lbits)
     pb = pslab.reshape(num_keys, B, Lc).transpose(1, 0, 2)
@@ -87,13 +95,14 @@ def hash_join_plan(left_keys: tuple, left_valid: jnp.ndarray,
         counts_g, rank_g = bucket_probe_buckets(
             pb, po, bb, bo, interpret=(impl == "pallas_interpret"))
 
-    # counts back to original left-row order (trash slot lcap for empties)
+    # counts + probed back to original left-row order in ONE stacked
+    # scatter (trash slot lcap for empties)
     idx = jnp.where(pocc > 0, prow, lcap)
-    match_counts = (jnp.zeros((lcap + 1,), jnp.int32)
-                    .at[idx].set(counts_g.reshape(-1))[:lcap])
-    probed = (jnp.zeros((lcap + 1,), bool)
-              .at[idx].set(pocc > 0)[:lcap])
-    return HashJoinPlan(match_counts=match_counts, probed=probed,
+    packed = (jnp.zeros((2, lcap + 1), jnp.int32)
+              .at[:, idx].set(jnp.stack([counts_g.reshape(-1),
+                                         (pocc > 0).astype(jnp.int32)]))
+              [:, :lcap])
+    return HashJoinPlan(match_counts=packed[0], probed=packed[1] > 0,
                         probe_row=prow.reshape(B, Lc),
                         rank=rank_g,
                         build_row=brow.reshape(B, C),

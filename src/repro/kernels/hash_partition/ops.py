@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from .kernel import radix_histogram_ranks_tiles
 from .ref import radix_histogram_ranks_ref
 
@@ -18,12 +19,8 @@ _DEFAULT_TILE = 1024
 
 
 @functools.partial(jax.jit, static_argnames=("num_partitions", "impl", "tile"))
-def radix_histogram_ranks(pid: jnp.ndarray, num_partitions: int,
-                          impl: str = "ref", tile: int = _DEFAULT_TILE):
-    """hist (P,), ranks (n,) — stable within-partition ranks.
-
-    impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
-    """
+def _radix_histogram_ranks(pid: jnp.ndarray, num_partitions: int,
+                           impl: str = "ref", tile: int = _DEFAULT_TILE):
     n = pid.shape[0]
     if impl == "ref" or n < tile:
         return radix_histogram_ranks_ref(pid, num_partitions)
@@ -49,15 +46,35 @@ def radix_histogram_ranks(pid: jnp.ndarray, num_partitions: int,
     return hist, ranks
 
 
+def radix_histogram_ranks(pid: jnp.ndarray, num_partitions: int,
+                          impl: str = "ref", tile: int | None = None):
+    """hist (P,), ranks (n,) — stable within-partition ranks.
+
+    impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    ``tile=None`` resolves through the autotuner (``REPRO_TILE`` override).
+    """
+    if tile is None:
+        tile = autotune.tuned("tile", impl, pid.shape[0])
+    return _radix_histogram_ranks(pid, num_partitions, impl=impl, tile=tile)
+
+
 @functools.partial(jax.jit, static_argnames=("num_partitions", "impl", "tile"))
+def _partition_plan(pid: jnp.ndarray, num_partitions: int,
+                    impl: str = "ref", tile: int = _DEFAULT_TILE):
+    hist, ranks = _radix_histogram_ranks(pid, num_partitions, impl=impl,
+                                         tile=tile)
+    offsets = jnp.cumsum(hist) - hist
+    return hist, offsets[pid] + ranks
+
+
 def partition_plan(pid: jnp.ndarray, num_partitions: int,
-                   impl: str = "ref", tile: int = _DEFAULT_TILE):
+                   impl: str = "ref", tile: int | None = None):
     """(hist, dest): dest[i] = exclusive_offset[pid[i]] + rank[i].
 
     Scattering row i to slot ``dest[i]`` groups rows by partition, stable
     within each partition (exactly Cylon's hash-partition layout).
+    ``tile=None`` resolves through the autotuner (``REPRO_TILE`` override).
     """
-    hist, ranks = radix_histogram_ranks(pid, num_partitions, impl=impl,
-                                        tile=tile)
-    offsets = jnp.cumsum(hist) - hist
-    return hist, offsets[pid] + ranks
+    if tile is None:
+        tile = autotune.tuned("tile", impl, pid.shape[0])
+    return _partition_plan(pid, num_partitions, impl=impl, tile=tile)

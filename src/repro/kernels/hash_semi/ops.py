@@ -18,14 +18,17 @@ the conformance suite checks the counters trip exactly at capacity.  A
 probe-dropped left row's membership is unknown: it reports ``member=
 False`` / ``probed=False`` and is counted, never guessed.
 
-Keys are compared as int32 bit-planes (floats are bitcast after
-normalizing ``-0.0`` to ``+0.0``), so multi-column keys are exact — the
-hash only picks the bucket; membership is decided on the full key bits.
-NaN float keys compare equal-by-bits (membership of NaN keys is out of
-contract, as it is for the sort-merge path's sort order).  The engine
-casts both sides to their *promoted* common dtype before this plan (the
-same rule as the sort-merge path), so mixed-dtype probes cannot collide
-distinct keys.
+The plan takes **key bit-planes**, not raw key columns: the engine
+extracts them once per side (``bucketing.BucketPlan`` /
+``bucketing.key_bits`` — floats bitcast to int32 after normalizing
+``-0.0`` to ``+0.0``) and shares them with the host-side sizing pass, so
+build and probe never re-hash the same columns.  Multi-column keys are
+exact — the hash only picks the bucket; membership is decided on the
+full key bits.  NaN float keys compare equal-by-bits (membership of NaN
+keys is out of contract, as it is for the sort-merge path's sort order).
+The engine casts both sides to their *promoted* common dtype before
+extracting the planes (the same rule as the sort-merge path), so
+mixed-dtype probes cannot collide distinct keys.
 """
 import functools
 from typing import NamedTuple
@@ -33,7 +36,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..bucketing import group_to_slabs, key_bits
+from ..bucketing import group_to_slabs, key_bits  # noqa: F401
 from ..hash_join import default_hash_join_sizes
 from .kernel import bucket_member_buckets
 from .ref import bucket_member_ref
@@ -57,24 +60,27 @@ class HashSemiPlan(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("num_buckets",
                                              "bucket_capacity",
                                              "probe_capacity", "impl"))
-def hash_semi_plan(left_keys: tuple, left_valid: jnp.ndarray,
-                   right_keys: tuple, right_valid: jnp.ndarray, *,
+def hash_semi_plan(left_bits: tuple, left_valid: jnp.ndarray,
+                   right_bits: tuple, right_valid: jnp.ndarray, *,
                    num_buckets: int, bucket_capacity: int,
-                   probe_capacity: int, impl: str = "ref") -> HashSemiPlan:
+                   probe_capacity: int, impl: str = "ref",
+                   left_bid: jnp.ndarray | None = None,
+                   right_bid: jnp.ndarray | None = None) -> HashSemiPlan:
     """Bucketed build (right key set) + membership probe (left) over
-    parallel key columns.
+    parallel key bit-planes.
 
     impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    ``left_bid`` / ``right_bid`` carry precomputed bucket ids (the eager
+    sizing path's hash, via ``BucketPlan``) so the plan doesn't re-hash.
     """
     B, C, Lc = num_buckets, bucket_capacity, probe_capacity
-    lbits = tuple(key_bits(c) for c in left_keys)
-    rbits = tuple(key_bits(c) for c in right_keys)
+    lbits, rbits = tuple(left_bits), tuple(right_bits)
     lcap = left_valid.shape[0]
 
     bslab, bocc, _, _, build_dropped = group_to_slabs(
-        rbits, right_valid, B, C, impl)
+        rbits, right_valid, B, C, impl, bid=right_bid)
     pslab, pocc, prow, _, probe_dropped = group_to_slabs(
-        lbits, left_valid, B, Lc, impl)
+        lbits, left_valid, B, Lc, impl, bid=left_bid)
 
     num_keys = len(lbits)
     pb = pslab.reshape(num_keys, B, Lc).transpose(1, 0, 2)
@@ -87,12 +93,13 @@ def hash_semi_plan(left_keys: tuple, left_valid: jnp.ndarray,
         member_g = bucket_member_buckets(
             pb, po, bb, bo, interpret=(impl == "pallas_interpret"))
 
-    # members back to original left-row order (trash slot lcap for empties)
+    # member + probed back to original left-row order in ONE stacked
+    # scatter (trash slot lcap for empties)
     idx = jnp.where(pocc > 0, prow, lcap)
-    member = (jnp.zeros((lcap + 1,), bool)
-              .at[idx].set(member_g.reshape(-1) > 0)[:lcap])
-    probed = (jnp.zeros((lcap + 1,), bool)
-              .at[idx].set(pocc > 0)[:lcap])
-    return HashSemiPlan(member=member, probed=probed,
+    packed = (jnp.zeros((2, lcap + 1), jnp.int32)
+              .at[:, idx].set(jnp.stack([
+                  (member_g.reshape(-1) > 0).astype(jnp.int32),
+                  (pocc > 0).astype(jnp.int32)]))[:, :lcap])
+    return HashSemiPlan(member=packed[0] > 0, probed=packed[1] > 0,
                         build_dropped=build_dropped,
                         probe_dropped=probe_dropped)

@@ -33,9 +33,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from .kernel import digit_histogram_ranks_tiles
 from .ref import digit_histogram_ranks_ref, extract_digits
 
+# historical defaults — the public ops now resolve ``radix_bits``/``tile``
+# through ``kernels.autotune`` (per-backend cache, ``REPRO_RADIX_BITS`` /
+# ``REPRO_TILE`` overrides, optional first-use measurement sweep); these
+# constants remain the autotuner's fallback values.
 _DEFAULT_TILE = 1024
 DEFAULT_RADIX_BITS = 8
 
@@ -97,16 +102,10 @@ def _scatter_pass(perm: jnp.ndarray, words: jnp.ndarray, shift: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("impl", "radix_bits", "tile"))
-def radix_permutation(cols: tuple, invalid: jnp.ndarray, *,
-                      impl: str = "ref",
-                      radix_bits: int = DEFAULT_RADIX_BITS,
-                      tile: int = _DEFAULT_TILE) -> jnp.ndarray:
-    """Stable gather index sorting by ``cols`` lexicographically ascending,
-    rows with ``invalid`` set last — bit-identical to the permutation of a
-    stable ``lax.sort((invalid, *cols, iota))``.
-
-    impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
-    """
+def _radix_permutation(cols: tuple, invalid: jnp.ndarray, *,
+                       impl: str = "ref",
+                       radix_bits: int = DEFAULT_RADIX_BITS,
+                       tile: int = _DEFAULT_TILE) -> jnp.ndarray:
     n = invalid.shape[0]
     perm = jnp.arange(n, dtype=jnp.int32)
     for col in reversed(cols):                 # least-significant key first
@@ -119,41 +118,71 @@ def radix_permutation(cols: tuple, invalid: jnp.ndarray, *,
     return _scatter_pass(perm, flag, 0, 1, impl, tile)
 
 
+def radix_permutation(cols: tuple, invalid: jnp.ndarray, *,
+                      impl: str = "ref", radix_bits: int | None = None,
+                      tile: int | None = None) -> jnp.ndarray:
+    """Stable gather index sorting by ``cols`` lexicographically ascending,
+    rows with ``invalid`` set last — bit-identical to the permutation of a
+    stable ``lax.sort((invalid, *cols, iota))``.
+
+    impl: 'ref' (pure jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    ``radix_bits``/``tile`` default to the autotuner's choice for this
+    backend and size class (``REPRO_RADIX_BITS``/``REPRO_TILE`` override).
+    """
+    radix_bits, tile = autotune.radix_params(impl, invalid.shape[0],
+                                             radix_bits, tile)
+    return _radix_permutation(tuple(cols), invalid, impl=impl,
+                              radix_bits=radix_bits, tile=tile)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("impl", "radix_bits", "tile"))
-def radix_rank(cols: tuple, invalid: jnp.ndarray, *, impl: str = "ref",
-               radix_bits: int = DEFAULT_RADIX_BITS,
-               tile: int = _DEFAULT_TILE) -> jnp.ndarray:
-    """Each row's stable output position under the same order (the inverse
-    of :func:`radix_permutation`): valid rows with globally distinct keys
-    get exactly their canonical (key-sorted) slot in ``[0, n_valid)``."""
+def _radix_rank(cols: tuple, invalid: jnp.ndarray, *, impl: str,
+                radix_bits: int, tile: int) -> jnp.ndarray:
     n = invalid.shape[0]
-    perm = radix_permutation(cols, invalid, impl=impl,
-                             radix_bits=radix_bits, tile=tile)
+    perm = _radix_permutation(cols, invalid, impl=impl,
+                              radix_bits=radix_bits, tile=tile)
     iota = jnp.arange(n, dtype=jnp.int32)
     return jnp.zeros((n,), jnp.int32).at[perm].set(iota)
 
 
+def radix_rank(cols: tuple, invalid: jnp.ndarray, *, impl: str = "ref",
+               radix_bits: int | None = None,
+               tile: int | None = None) -> jnp.ndarray:
+    """Each row's stable output position under the same order (the inverse
+    of :func:`radix_permutation`): valid rows with globally distinct keys
+    get exactly their canonical (key-sorted) slot in ``[0, n_valid)``."""
+    radix_bits, tile = autotune.radix_params(impl, invalid.shape[0],
+                                             radix_bits, tile)
+    return _radix_rank(tuple(cols), invalid, impl=impl,
+                       radix_bits=radix_bits, tile=tile)
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "tile"))
-def stable_partition_perm(keep: jnp.ndarray, *, impl: str = "ref",
-                          tile: int = _DEFAULT_TILE) -> jnp.ndarray:
-    """1-bit fast path: gather index moving ``keep`` rows to the front,
-    stable — bit-identical to ``argsort(~keep, stable=True)`` in a single
-    counting pass (the compaction hot loop of ``compact()``/``select()``
-    and the shuffle's receive side)."""
+def _stable_partition_perm(keep: jnp.ndarray, *, impl: str,
+                           tile: int) -> jnp.ndarray:
     n = keep.shape[0]
     perm = jnp.arange(n, dtype=jnp.int32)
     flag = jnp.logical_not(keep).astype(jnp.int32)
     return _scatter_pass(perm, flag, 0, 1, impl, tile)
 
 
+def stable_partition_perm(keep: jnp.ndarray, *, impl: str = "ref",
+                          tile: int | None = None) -> jnp.ndarray:
+    """1-bit fast path: gather index moving ``keep`` rows to the front,
+    stable — bit-identical to ``argsort(~keep, stable=True)`` in a single
+    counting pass (the compaction hot loop of ``compact()``/``select()``
+    and the shuffle's receive side)."""
+    if tile is None:
+        tile = autotune.tuned("tile", impl, keep.shape[0])
+    return _stable_partition_perm(keep, impl=impl, tile=tile)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("num_partitions", "impl", "radix_bits",
                                     "tile"))
-def grouped_ranks(pid: jnp.ndarray, num_partitions: int, *,
-                  impl: str = "ref",
-                  radix_bits: int = DEFAULT_RADIX_BITS,
-                  tile: int = _DEFAULT_TILE):
+def _grouped_ranks(pid: jnp.ndarray, num_partitions: int, *,
+                   impl: str, radix_bits: int, tile: int):
     """(hist (P,), stable within-partition ranks (n,)) for any ``P``.
 
     The histogram is one scatter-add; ranks come from the global stable
@@ -174,3 +203,15 @@ def grouped_ranks(pid: jnp.ndarray, num_partitions: int, *,
     grank = jnp.zeros((n,), jnp.int32).at[perm].set(iota)
     offsets = jnp.cumsum(hist) - hist
     return hist, grank - offsets[pid]
+
+
+def grouped_ranks(pid: jnp.ndarray, num_partitions: int, *,
+                  impl: str = "ref", radix_bits: int | None = None,
+                  tile: int | None = None):
+    """(hist (P,), stable within-partition ranks (n,)) for any ``P`` —
+    see :func:`_grouped_ranks`; ``radix_bits``/``tile`` resolve through
+    the autotuner when omitted."""
+    radix_bits, tile = autotune.radix_params(impl, pid.shape[0],
+                                             radix_bits, tile)
+    return _grouped_ranks(pid, num_partitions, impl=impl,
+                          radix_bits=radix_bits, tile=tile)

@@ -102,6 +102,42 @@ def check_join_backends_agree(ctx, rng):
     print("dist_join backends bit-identical ok")
 
 
+def check_join_planned(ctx, rng):
+    """plan_dist_join_sizes: exact host-side capacities — zero drops and
+    bit-identical output to the generously-overcommitted baseline run,
+    under both local backends."""
+    rows, nkeys = 120, 12
+    left = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+            "lv": rng.normal(size=rows).astype(np.float32)}
+    right = {"k": rng.integers(0, nkeys, rows).astype(np.int32),
+             "rv": rng.normal(size=rows).astype(np.float32)}
+    cap = (rows // WORLD) * 3
+    outs = {}
+    for impl in ("sortmerge", "hash"):
+        plan = D.plan_dist_join_sizes([left["k"]], [right["k"]],
+                                      world=WORLD, local_impl=impl)
+        gl = D.distribute_table(ctx, left, capacity_per_shard=cap)
+        gr = D.distribute_table(ctx, right, capacity_per_shard=cap)
+        pipe = D.DistributedPipeline(
+            ctx, lambda c, a, b, impl=impl, plan=plan: D.dist_join(
+                c, a, b, left_on=["k"],
+                out_capacity=plan["out_capacity"],
+                shuffle_sizes=plan["shuffle_sizes"], local_impl=impl,
+                local_join_sizes=plan["local_join_sizes"]))
+        out, dropped = pipe(gl, gr)
+        assert int(np.max(np.asarray(dropped))) == 0, impl
+        outs[impl] = D.collect_table(ctx, out)
+    lk, rk = left["k"], right["k"]
+    pairs = [(i, j) for i in range(rows) for j in range(rows)
+             if lk[i] == rk[j]]
+    want = {"k": lk[[i for i, _ in pairs]],
+            "lv": left["lv"][[i for i, _ in pairs]],
+            "rv": right["rv"][[j for _, j in pairs]]}
+    for impl, got in outs.items():
+        assert as_sets(got) == as_sets(want), f"planned[{impl}] mismatch"
+    print("dist_join planned sizes ok")
+
+
 def check_groupby(ctx, rng):
     data = {"k": rng.integers(0, 9, 100).astype(np.int32),
             "v": rng.normal(size=100).astype(np.float32)}
@@ -310,6 +346,7 @@ def main():
     check_join(ctx, rng, "sortmerge")
     check_join(ctx, rng, "hash")
     check_join_backends_agree(ctx, rng)
+    check_join_planned(ctx, rng)
     check_groupby(ctx, rng)
     check_unique(ctx, rng)
     check_sort(ctx, rng, "xla")

@@ -179,6 +179,44 @@ def _jaxpr_primitives(fn, *args):
     return prims
 
 
+def _count_scatter_eqns(fn, *args) -> int:
+    """Number of ``scatter`` eqns (``.at[].set``) anywhere in the jaxpr —
+    the fused-bucketing regression pin: one stacked scatter per slab
+    family, not one scatter per column."""
+    n = 0
+
+    def walk(jaxpr):
+        nonlocal n
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scatter":
+                n += 1
+            for v in eqn.params.values():
+                for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if hasattr(x, "jaxpr"):
+                        walk(x.jaxpr)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return n
+
+
+def test_fused_groupby_plan_single_scatter():
+    """The fused bucketing path writes ALL slab columns — key planes,
+    occupancy, row ids and every value payload — with ONE stacked
+    scatter: the groupby plan's jaxpr carries exactly one ``scatter``
+    eqn, however many value columns ride along."""
+    import jax.numpy as jnp
+    from repro.kernels.hash_groupby import hash_groupby_plan
+    n = 64
+    bits = (jnp.arange(n, dtype=jnp.int32),)
+    valid = jnp.ones((n,), bool)
+    vals = (jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32))
+    cnt = _count_scatter_eqns(
+        lambda b, v, w: hash_groupby_plan(b, v, w, num_buckets=8,
+                                          bucket_capacity=16, impl="ref"),
+        bits, valid, vals)
+    assert cnt == 1, cnt
+
+
 @pytest.mark.parametrize("capacity", [ROWS + 5, 4096],
                          ids=["small", "above_exact_slab"])
 def test_hash_path_contains_no_sort_primitive(capacity, rng):

@@ -174,3 +174,22 @@ def test_dist_join_conformance(world):
     sys.stderr.write(proc.stderr[-4000:])
     assert proc.returncode == 0, f"join conformance failed (world={world})"
     assert "JOIN CONFORMANCE PASSED" in proc.stdout
+
+
+def test_fused_join_plan_three_scatters():
+    """The fused bucketing path issues ONE stacked scatter per slab
+    family: build slabs, probe slabs, and the packed match-counts/probed
+    result — exactly three ``scatter`` eqns in the join plan's jaxpr,
+    regardless of key-column count."""
+    import jax.numpy as jnp
+    from repro.kernels.hash_join import hash_join_plan
+    from test_groupby_backends import _count_scatter_eqns
+    n = 64
+    bits = (jnp.arange(n, dtype=jnp.int32),
+            jnp.arange(n, dtype=jnp.int32) % 7)
+    valid = jnp.ones((n,), bool)
+    cnt = _count_scatter_eqns(
+        lambda b, v: hash_join_plan(b, v, b, v, num_buckets=8,
+                                    bucket_capacity=16, probe_capacity=16,
+                                    impl="ref"), bits, valid)
+    assert cnt == 3, cnt

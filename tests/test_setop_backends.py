@@ -314,3 +314,48 @@ def test_dist_setop_conformance(world):
     assert proc.returncode == 0, \
         f"setop conformance failed (world={world})"
     assert "SETOP CONFORMANCE PASSED" in proc.stdout
+
+
+def test_fused_semi_plan_three_scatters():
+    """One stacked scatter per slab family on the fused bucketing path:
+    build slabs, probe slabs, packed member/probed result — exactly three
+    ``scatter`` eqns in the semi plan's jaxpr."""
+    import jax.numpy as jnp
+    from repro.kernels.hash_semi import hash_semi_plan
+    from test_groupby_backends import _count_scatter_eqns
+    n = 64
+    bits = (jnp.arange(n, dtype=jnp.int32),)
+    valid = jnp.ones((n,), bool)
+    cnt = _count_scatter_eqns(
+        lambda b, v: hash_semi_plan(b, v, b, v, num_buckets=8,
+                                    bucket_capacity=16, probe_capacity=16,
+                                    impl="ref"), bits, valid)
+    assert cnt == 3, cnt
+
+
+@pytest.mark.parametrize("op", ["isin", "difference", "intersect"])
+def test_hash_semi_key_bits_once_per_side(op, monkeypatch, rng):
+    """BucketPlan extracts the key bit-planes exactly once per side and
+    shares them between the sizing pass and the build/probe kernel plan
+    — no re-hash between build and probe of the same columns."""
+    from repro.kernels import bucketing
+    calls = []
+    real = bucketing.key_bits
+
+    def counting(col):
+        calls.append(col.shape)
+        return real(col)
+
+    monkeypatch.setattr(bucketing, "key_bits", counting)
+    a, b = make_pair("uniform", rng)
+    ta, tb = tables(a, b)
+    if op == "isin":
+        L.isin(ta, "k", tb, "k", impl="hash")
+        expect = 2                     # probe side + values side
+    elif op == "difference":
+        L.difference(ta, tb, ["k"], impl="hash")
+        expect = 2
+    else:
+        L.intersect(ta, tb, ["k"], impl="hash", dedup_impl="hash")
+        expect = 3                     # semi (2 sides) + key-only dedup
+    assert len(calls) == expect, calls
